@@ -1,0 +1,40 @@
+"""Continuous-batching serving throughput with ABFT on/off — the serving-side
+analogue of the paper's Table 2 (FT overhead on a live workload)."""
+import time
+
+
+def run():
+    import jax
+    import numpy as np
+    from repro.configs.base import smoke_config
+    from repro.models import transformer as tf
+    from repro.serve.engine import Request, ServeEngine
+
+    lines = []
+    cfg = smoke_config("qwen2-0.5b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    rs = np.random.RandomState(0)
+    prompts = [rs.randint(0, cfg.vocab_size, 8).tolist() for _ in range(6)]
+
+    times = {}
+    for mode in ("off", "verify"):
+        engine = ServeEngine(cfg, params, slots=2, max_len=64,
+                             abft_mode=mode)
+        for i, p in enumerate(prompts):
+            engine.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        engine.run(max_steps=5)  # warm the compiled programs
+        engine2 = ServeEngine(cfg, params, slots=2, max_len=64,
+                              abft_mode=mode)
+        for i, p in enumerate(prompts):
+            engine2.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        t0 = time.perf_counter()
+        finished = engine2.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in finished)
+        times[mode] = dt / max(toks, 1)
+        lines.append((f"serving/qwen2-smoke/abft-{mode}",
+                      f"{times[mode]*1e6:.0f}",
+                      f"tok_per_s={1/times[mode]:.1f} requests={len(finished)}"))
+    lines.append(("serving/abft_overhead", f"{times['verify']*1e6:.0f}",
+                  f"verify_vs_off={100*times['verify']/times['off']:.1f}%"))
+    return lines

@@ -1,0 +1,20 @@
+"""Paper Figure 7: strong scalability — fixed problem size, growing p; the
+FT overhead must decrease to 0 and depend on p, not n."""
+from repro.core.model_perf import (JACQUARD, abft_pdgemm_time,
+                                   gflops_per_proc, pdgemm_time)
+
+
+def run():
+    lines = []
+    for n_total in (24000, 48000, 96000):
+        for q in (4, 6, 8, 12, 16, 24):
+            p = q * q
+            nloc = n_total // q
+            t_p = pdgemm_time(n_total, p, JACQUARD)
+            pblas = gflops_per_proc(n_total, p, t_p)
+            t_a = abft_pdgemm_time(nloc, p, JACQUARD)
+            abft = gflops_per_proc((q - 1) * nloc, p, t_a)
+            lines.append((f"strong_scaling/n{n_total}/p{p}",
+                          f"{pblas*p:.0f}",
+                          f"abft={abft*p:.0f}GF overhead={100*(pblas/abft-1):.1f}%"))
+    return lines

@@ -1,0 +1,94 @@
+"""§Perf hillclimb A/B measurements on the three chosen cells.
+
+Runs dryrun_cell under option variants and prints before/after roofline
+terms per iteration.  Variants:
+
+  base       — StepOptions(microbatches=8)           [the recorded baseline]
+  defer      — + defer_grad_reduce (one DP psum per step, not per microbatch)
+  dots       — + remat_policy="dots" (save matmul outputs, less recompute)
+  defer+dots — both
+  abft       — + abft_mode="checksum" (the paper's technique, protected run)
+
+Usage:  PYTHONPATH=src python -m benchmarks.perf_iterations [--arch ... --shape ...]
+Writes experiments/perf/<arch>__<shape>__<variant>.json
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+CASES = [
+    ("qwen2-0.5b", "train_4k"),
+    ("kimi-k2-1t-a32b", "train_4k"),
+    ("qwen2-0.5b", "prefill_32k"),
+]
+
+VARIANTS = {
+    "base": {},
+    "defer": {"defer_grad_reduce": True},
+    "zero2": {"defer_grad_reduce": True, "zero2": True},
+    "dots": {"remat_policy": "dots"},
+    "defer+dots": {"defer_grad_reduce": True, "remat_policy": "dots"},
+    "zero2+dots": {"defer_grad_reduce": True, "zero2": True,
+                   "remat_policy": "dots"},
+    "abft": {"abft_mode": "checksum"},
+}
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def terms(rec):
+    c = rec["flops_per_device"] / PEAK_FLOPS
+    m = rec["bytes_accessed_per_device"] / HBM_BW
+    x = sum(rec["collective_bytes_per_device"].values()) / ICI_BW
+    mem = rec["memory"]
+    peak = (mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+            - mem["alias_bytes"]) / 2**30
+    return c, m, x, peak
+
+
+def main():
+    import dataclasses
+    import jax  # noqa
+    from repro.launch.dryrun import dryrun_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.step import StepOptions
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variants", default="base,defer,dots,abft")
+    args = ap.parse_args()
+    cases = [(args.arch, args.shape)] if args.arch else CASES
+    variants = args.variants.split(",")
+
+    outdir = Path("experiments/perf")
+    outdir.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+
+    print(f"{'cell':38s} {'variant':11s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'mem_GiB':>8s}")
+    for arch, shape in cases:
+        for vname in variants:
+            if shape != "train_4k" and vname != "base" and vname != "abft":
+                continue  # train-only options
+            opts = StepOptions(microbatches=8 if shape == "train_4k" else 1,
+                               **VARIANTS[vname])
+            path = outdir / f"{arch}__{shape}__{vname}.json"
+            if path.exists():
+                rec = json.loads(path.read_text())
+            else:
+                rec = dryrun_cell(arch, shape, mesh, opts=opts, verbose=False,
+                                  extra_tag=f"perf-{vname}")
+                path.write_text(json.dumps(rec, indent=1))
+            c, m, x, peak = terms(rec)
+            print(f"{arch + ' x ' + shape:38s} {vname:11s} {c:10.3f} {m:10.2f} "
+                  f"{x:10.2f} {peak:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

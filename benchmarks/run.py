@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_weak_scaling   -> Figure 4/5 + Table 1 (model, validated vs paper)
+  bench_overhead       -> Table 2 + Figure 6 (model + MEASURED local overhead)
+  bench_strong_scaling -> Figure 7
+  bench_kernels        -> fused ABFT-matmul kernel accounting
+  bench_train_step     -> live train-step ABFT overhead + diskless encode
+  bench_serving        -> continuous-batching throughput, ABFT on/off
+  roofline             -> per (arch x shape) roofline terms from the dry-run
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_overhead, bench_serving,
+                            bench_strong_scaling, bench_train_step,
+                            bench_weak_scaling, roofline)
+    mods = [bench_weak_scaling, bench_overhead, bench_strong_scaling,
+            bench_kernels, bench_train_step, bench_serving, roofline]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in mods:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us},{derived}")
+        except Exception as e:  # noqa
+            failed += 1
+            print(f"{mod.__name__},ERROR,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests and ABFT-verified projections —
+every matmul in the decode path carries Huang-Abraham checksum columns and is
+checked against silent data corruption on the fly.
+
+Run:  PYTHONPATH=src python examples/serve_verified.py
+"""
+from repro.launch.serve import run
+
+
+def main():
+    # batched generation on three architectures incl. MoE and SSM
+    for arch in ("qwen2-0.5b", "qwen3-moe-30b-a3b", "xlstm-350m"):
+        run(arch, smoke=True, batch=4, prompt_len=24, gen=16,
+            abft_mode="verify")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.disk import CheckpointManager
+from repro.ckpt.diskless import DisklessCheckpoint
+from repro.ckpt.elastic import reshard_restore

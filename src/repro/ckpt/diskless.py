@@ -1,0 +1,104 @@
+"""Diskless checkpointing of the train state — the paper's §2.1 applied to a
+pytree, with ROTATED (RAID-5-style) checksum placement.
+
+The paper dedicates extra processes to checksums.  A TPU pod has no spare
+devices, so we adapt: the state is viewed as `p` logical shards along the DP
+axis; `f` weighted checksums are computed with the paper's checkpoint matrix
+and their *storage is rotated* across the same devices (shard i's checksum
+slice lives on device (i + 1 + j) mod p), so
+
+  * no dedicated devices (the paper's (2p-1)/p^2 tax becomes f/p memory),
+  * recovery of any f lost DP shards is the same f x f solve,
+  * the encode is `kernels.checksum_encode` (HBM-bound, overlappable with
+    the next step's compute).
+
+Semantics are the classic diskless protocol: at encode time every device
+keeps a LOCAL in-memory snapshot of its shard (O(1x state) local memory, the
+standard diskless cost) plus the weighted checksums.  On failure, survivors
+roll back to their local snapshot and the lost shards are solved from the
+checksums — a bounded rollback of at most `encode cadence` steps, with no
+disk in the loop.  (The paper's *zero*-rollback on-the-fly property lives at
+the matmul level in core.summa; state-level protection is checkpoint-based,
+exactly as the paper's §2.1.)
+
+On this substrate the "DP shards" are materialized as a stacked leading axis
+(tests run it on one host); on a pod the same code runs under pjit with the
+leading axis sharded over ("pod","data") — placement then *is* the rotation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksum import checkpoint_matrix
+from repro.kernels import ops
+
+__all__ = ["DisklessCheckpoint"]
+
+
+class DisklessCheckpoint:
+    def __init__(self, p: int, f: int = 1, seed: int = 0):
+        self.p = p
+        self.f = f
+        self.a = checkpoint_matrix(f, p, seed=seed)
+        self._enc = None
+        self._snapshot = None
+        self._step = None
+
+    # -- encode (the "checkpoint") -------------------------------------------
+    def encode(self, state, step: Optional[int] = None):
+        """Snapshot + checksum every leaf over its leading [p, ...] axis.
+
+        On a pod the snapshot is each device's local copy of its own shard
+        (device-local memory); here it is the stacked tree."""
+        def enc(x):
+            if x.ndim >= 3 and x.shape[0] == self.p:
+                return ops.checksum_encode(x, self.a)
+            if x.ndim >= 1 and x.shape[0] == self.p:
+                flat = x.reshape(self.p, -1)
+                y = jnp.einsum("fp,pn->fn", self.a.astype(jnp.float32),
+                               flat.astype(jnp.float32))
+                return y.reshape((self.f,) + x.shape[1:]).astype(x.dtype)
+            # tiny/odd leaves (scalars, counters): replicate verbatim
+            return x
+
+        # real copy: the live state buffers may be donated into the next
+        # step; the local checkpoint must own its memory (that's the
+        # diskless protocol's 1x local-memory cost)
+        self._snapshot = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
+        self._enc = jax.tree.map(enc, state)
+        self._step = step
+        return self._enc
+
+    # -- recover ---------------------------------------------------------------
+    def recover(self, damaged, failed: Sequence[int]):
+        """Roll back to the last encode with `failed` shards rebuilt from the
+        checksums.  `damaged` is only used for structure (its values are the
+        post-failure state and are discarded — bounded rollback)."""
+        assert self._enc is not None, "no diskless checkpoint taken"
+        assert len(failed) <= self.f, (
+            f"{len(failed)} failures > capacity f={self.f}")
+        from repro.core.checksum import recover as rec
+
+        def fix(snap, y):
+            if snap.ndim >= 1 and snap.shape[0] == self.p \
+                    and isinstance(y, jax.Array) and y.shape[:1] == (self.f,):
+                # survivors roll back to their snapshot; failed shards are
+                # solved from checksums + surviving snapshot shards (the
+                # failed entries of `snap` are treated as lost).
+                return rec(snap, y, self.a, list(failed))
+            # copy: the caller may donate the returned state into the next
+            # step — the snapshot must survive for repeated recoveries
+            return jnp.array(snap, copy=True)
+
+        return jax.tree.map(fix, self._snapshot, self._enc)
+
+    @property
+    def step(self):
+        return self._step
+
+    def memory_overhead(self) -> float:
+        """f/p — the paper's 'more processors, cheaper fault tolerance'."""
+        return self.f / self.p

@@ -1,0 +1,44 @@
+"""Elastic restore: re-shard a checkpoint onto a different mesh.
+
+The TPU-native answer to FT-MPI's process respawn (DESIGN.md §3): when a pod
+(or slice) is lost, training resumes on a smaller mesh — e.g. 2x16x16 ->
+1x16x16 — by restoring the latest checkpoint with shardings inferred for the
+*new* mesh.  Params/opt-state shardings are mesh-shape-agnostic (rules are
+name-based), so the same state tree places onto any mesh whose axis sizes
+divide the respective dims; global batch is re-split over the surviving DP
+extent (gradient noise scale changes, schedule does not).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.dist import sharding as shd
+from repro.train.step import StepOptions, state_specs
+
+__all__ = ["reshard_restore", "survivor_mesh"]
+
+
+def survivor_mesh(failed_pods: int = 1, total_pods: int = 2):
+    """Mesh over the surviving pods (drop the 'pod' axis when one remains)."""
+    from repro.launch.mesh import make_production_mesh
+    remaining = total_pods - failed_pods
+    if remaining <= 0:
+        raise ValueError("no survivors")
+    if remaining == 1:
+        return make_production_mesh(multi_pod=False)
+    return jax.make_mesh((remaining, 16, 16), ("pod", "data", "model"))
+
+
+def reshard_restore(manager, step: int, state_like, new_mesh,
+                    opts: Optional[StepOptions] = None, cfg=None):
+    """Restore checkpoint `step` placed for `new_mesh`.
+
+    state_like: pytree of ShapeDtypeStructs matching the saved state.
+    Returns the restored state, sharded for the surviving mesh.
+    """
+    opts = opts or StepOptions()
+    specs = state_specs(state_like, new_mesh, opts, cfg)
+    shardings = shd.to_shardings(specs, new_mesh)
+    return manager.restore(step, state_like, sharding_tree=shardings)

@@ -1,0 +1,20 @@
+"""ABFT-LA core: the paper's contribution as composable JAX modules."""
+from repro.core.checksum import (
+    checkpoint_matrix, encode, recover, encode_pytree, recover_pytree,
+)
+from repro.core.encoding import (
+    EncodingSpec, make_spec, encode_block_cols, encode_block_rows, encode_full,
+    strip, split_full, block_views,
+)
+from repro.core.detect import verify, locate_and_correct, VerifyResult
+from repro.core.recovery import recover_blocks, recoverable
+from repro.core.summa import (
+    FailureEvent, MultiFailureEvent, BitflipEvent, abft_summa, summa,
+    encode_operands,
+)
+from repro.core.abft_gemm import (
+    ABFTConfig, encode_weight, abft_matmul, verify_output, correct_output,
+)
+from repro.core.context import FTContext
+from repro.core import model_perf
+from repro.core import galois

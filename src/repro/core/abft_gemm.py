@@ -1,0 +1,127 @@
+"""ABFT-protected matmul / einsum for model layers (Huang-Abraham per layer).
+
+This is the "fault-tolerant BLAS" the paper argues should encapsulate all the
+fault tolerance of a dense-LA stack (§1), applied to the matmuls of an LM:
+
+    W_F = [W, W @ w_r]          (f checksum columns; encoded once per step,
+                                 after the optimizer update — amortized)
+    Y_F = X @ W_F               (checksum columns ride along: +f/n FLOPs)
+    verify:  Y_F[..., -f:] =?= Y_F[..., :-f] @ w_r    (O(m n f) vs O(m n k))
+    correct: single corrupted element located by (row = argmax residual rows,
+             col via a second weighted checksum), fixed by the residual.
+
+Modes (config `ft.mode`):
+    off      — plain matmul
+    checksum — carry checksums, don't verify (zero sync cost; verify lazily)
+    verify   — carry + verify; returns an `ok` flag alongside
+    correct  — carry + verify + correct single bit-flips in the output
+
+The element-granular weight matrix here is ``w_r = checkpoint_matrix(f, n).T``
+(n = output features), i.e. the paper's encoding at element granularity —
+appropriate because a TPU shard failure erases a *slab* of Y, which the SUMMA
+path handles; this path targets silent data corruption (bit-flips), where
+element granularity maximizes location precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksum import checkpoint_matrix
+
+__all__ = ["ABFTConfig", "encode_weight", "abft_matmul", "verify_output",
+           "correct_output"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ABFTConfig:
+    mode: str = "off"          # off | checksum | verify | correct
+    f: int = 2                 # number of checksum columns (2 => locate 2D)
+    tol_factor: float = 256.0  # residual threshold multiplier
+    seed: int = 17
+
+    @property
+    def active(self) -> bool:
+        return self.mode != "off"
+
+
+def _weights(n: int, f: int, seed: int, dtype) -> jax.Array:
+    """Element-granularity encoding weights w_r: [n, f] (row 0 = plain sum)."""
+    return checkpoint_matrix(f, n, seed=seed).T.astype(dtype)
+
+
+def encode_weight(w: jax.Array, cfg: ABFTConfig) -> jax.Array:
+    """Append f checksum columns to a [k, n] weight matrix -> [k, n + f]."""
+    n = w.shape[-1]
+    wr = _weights(n, cfg.f, cfg.seed, jnp.float32)
+    cs = (w.astype(jnp.float32) @ wr).astype(w.dtype)
+    return jnp.concatenate([w, cs], axis=-1)
+
+
+def abft_matmul(
+    x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Y = X @ W with fault-tolerance per cfg.mode.
+
+    w_enc must be `encode_weight(w, cfg)` when cfg.active, else plain w.
+    Returns (y, ok) where ok is None unless mode in {verify, correct}.
+    """
+    if not cfg.active:
+        return jnp.dot(x, w_enc, preferred_element_type=jnp.float32).astype(x.dtype), None
+    y_f = jnp.dot(x, w_enc, preferred_element_type=jnp.float32)
+    y, y_cs = y_f[..., : -cfg.f], y_f[..., -cfg.f :]
+    if cfg.mode == "checksum":
+        return y.astype(x.dtype), None
+    ok, residual = verify_output(y, y_cs, cfg)
+    if cfg.mode == "verify":
+        return y.astype(x.dtype), ok
+    y = correct_output(y, y_cs, residual, cfg)
+    return y.astype(x.dtype), ok
+
+
+def verify_output(y: jax.Array, y_cs: jax.Array, cfg: ABFTConfig):
+    """Check Y @ w_r == carried checksums, with the paper's residual scaling
+    tau ~ tol * n * eps * |Y|  (§4.3 residual checking)."""
+    n = y.shape[-1]
+    wr = _weights(n, cfg.f, cfg.seed, jnp.float32)
+    recomputed = y.astype(jnp.float32) @ wr
+    residual = recomputed - y_cs.astype(jnp.float32)   # [..., f]
+    eps = jnp.finfo(jnp.float32).eps if y.dtype in (jnp.float32, jnp.float64) \
+        else float(jnp.finfo(jnp.bfloat16).eps)
+    # mean-|.| scale: robust to a single corrupted element (see core.detect)
+    scale = jnp.mean(jnp.abs(y.astype(jnp.float32))) + 1e-30
+    tol = cfg.tol_factor * n * eps * scale
+    ok = jnp.max(jnp.abs(residual)) <= tol
+    return ok, residual
+
+
+def correct_output(y, y_cs, residual, cfg: ABFTConfig):
+    """Correct a single corrupted element of Y.
+
+    Row: argmax over the leading (flattened) axes of |residual[..., 0]|.
+    Column: the ratio residual[r,1]/residual[r,0] equals w_r[col,1]/w_r[col,0]
+    for the corrupted column (needs f >= 2); we pick the column whose weight
+    ratio matches, then subtract residual[r,0] / w_r[col,0].
+    """
+    if cfg.f < 2:
+        raise ValueError("correct mode needs f >= 2 checksum columns")
+    n = y.shape[-1]
+    wr = _weights(n, cfg.f, cfg.seed, jnp.float32)      # [n, f]
+    y32 = y.astype(jnp.float32)
+    flat_y = y32.reshape(-1, n)
+    flat_res = residual.reshape(-1, cfg.f)
+    r = jnp.argmax(jnp.abs(flat_res[:, 0]))
+    ratio = flat_res[r, 1] / (flat_res[r, 0] + 1e-30)
+    col = jnp.argmin(jnp.abs(wr[:, 1] / wr[:, 0] - ratio))
+    delta = flat_res[r, 0] / wr[col, 0]
+    corrupt = jnp.max(jnp.abs(flat_res[:, 0])) > 0  # gated by caller's ok flag
+    fixed = flat_y.at[r, col].add(-delta)
+    eps = float(jnp.finfo(jnp.float32).eps)
+    scale = jnp.max(jnp.abs(y32)) + 1e-30
+    tol = cfg.tol_factor * n * eps * scale
+    use_fixed = jnp.max(jnp.abs(flat_res)) > tol
+    out = jnp.where(use_fixed, fixed, flat_y)
+    return out.reshape(y.shape)

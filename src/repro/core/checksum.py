@@ -1,0 +1,107 @@
+"""Weighted-checksum algebra for f-failure diskless encoding (paper §2.1).
+
+A vector/pytree x is spread over p shards x_1..x_p.  To survive f failures we
+store f weighted checksums  y_j = sum_i A[j,i] * x_i  on spare storage.  Any
+f-failure set {i_1..i_f} is recoverable iff the f-by-f submatrix A[:, failed]
+is nonsingular.  We use a random Gaussian A (well-conditioned w.h.p., Chen &
+Dongarra 2005) in float arithmetic, which is what makes the *same* encoding
+usable as an on-the-fly ABFT checksum inside matmuls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "checkpoint_matrix",
+    "encode",
+    "recover",
+    "encode_pytree",
+    "recover_pytree",
+]
+
+
+def checkpoint_matrix(f: int, p: int, seed: int = 0, dtype=jnp.float32) -> jax.Array:
+    """The f-by-p checkpoint matrix A (paper §2.1).
+
+    Row 0 is all-ones so that the first checksum is the plain Huang-Abraham
+    sum-checksum (needed for the ABFT consistency relation); remaining rows
+    are Gaussian, giving well-conditioned f-by-f recovery systems w.h.p.
+    """
+    if f < 1:
+        raise ValueError(f"need f >= 1 checksums, got {f}")
+    if f > p:
+        raise ValueError(f"cannot encode f={f} failures over p={p} shards")
+    rng = np.random.RandomState(seed)
+    a = rng.standard_normal((f, p))
+    a[0, :] = 1.0
+    # Scale Gaussian rows to O(1) column norms to keep cancellation mild.
+    if f > 1:
+        a[1:] /= np.sqrt(p)
+        a[1:] += 1.0  # keep entries away from 0 (recoverability needs a_ji != 0)
+    return jnp.asarray(a, dtype=dtype)
+
+
+def encode(shards: jax.Array, a: jax.Array) -> jax.Array:
+    """Encode stacked shards [p, ...] into checksums [f, ...]: y = A @ x."""
+    p = shards.shape[0]
+    if a.shape[1] != p:
+        raise ValueError(f"checkpoint matrix is {a.shape}, shards have p={p}")
+    flat = shards.reshape(p, -1)
+    y = jnp.einsum("fp,pn->fn", a.astype(jnp.float32), flat.astype(jnp.float32))
+    return y.reshape((a.shape[0],) + shards.shape[1:]).astype(shards.dtype)
+
+
+def recover(
+    shards: jax.Array,
+    checksums: jax.Array,
+    a: jax.Array,
+    failed: Sequence[int],
+) -> jax.Array:
+    """Rebuild failed shards from survivors + checksums (paper §2.1).
+
+    Solves  A[:, failed] @ x_failed = y - A[:, ok] @ x_ok  for the lost
+    shards.  `shards` must contain arbitrary data at failed indices (it is
+    ignored).  Returns the full [p, ...] stack with failed entries restored.
+    """
+    failed = list(failed)
+    f_used = len(failed)
+    p = shards.shape[0]
+    if f_used == 0:
+        return shards
+    if f_used > a.shape[0]:
+        raise ValueError(
+            f"{f_used} failures but only {a.shape[0]} checksums available"
+        )
+    ok = jnp.asarray([i for i in range(p) if i not in failed])
+    failed_idx = jnp.asarray(failed)
+    flat = shards.reshape(p, -1).astype(jnp.float32)
+    y = checksums.reshape(checksums.shape[0], -1).astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+    # Use the first f_used checksums (any f_used-subset works; these exist).
+    rhs = y[:f_used] - a32[:f_used][:, ok] @ flat[ok]
+    sub = a32[:f_used][:, failed_idx]  # f_used x f_used
+    x_failed = jnp.linalg.solve(sub, rhs)
+    restored = flat.at[jnp.asarray(failed)].set(x_failed)
+    return restored.reshape(shards.shape).astype(shards.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Pytree variants: the diskless checkpoint of a full train state (§2.1 applied
+# to every leaf).  Shard axis is leaf axis 0 (the data-parallel stack).
+# ----------------------------------------------------------------------------
+
+def encode_pytree(tree, a: jax.Array):
+    """Checksum-encode every leaf of a [p, ...]-stacked pytree."""
+    return jax.tree.map(functools.partial(encode, a=a), tree)
+
+
+def recover_pytree(tree, checksums, a: jax.Array, failed: Sequence[int]):
+    """Recover failed shard indices of every leaf from the checksum pytree."""
+    return jax.tree.map(
+        lambda x, y: recover(x, y, a, failed), tree, checksums
+    )

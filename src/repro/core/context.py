@@ -1,0 +1,142 @@
+"""Fault-tolerant context — the paper's ABFT BLAS framework (§4.1) in JAX.
+
+Arrays (or whole pytrees) are *registered* to the context; registration
+checksum-encodes them across a shard axis.  When a failure occurs, everything
+registered is recovered and the application continues — "the code looks like
+a sequential code but the resulting application is parallel and
+fault-tolerant".
+
+Two encodings, as in the paper:
+  * ``floating_point`` (default): weighted float checksums — enables ABFT
+    (checksums survive linear-algebra ops on the data).
+  * ``xor`` (the Galois-field analogue GF(2^k) with the paper's caveat):
+    bit-exact erasure coding of the raw mantissa bits; rules out ABFT
+    (not linear over the reals) but guarantees bit-identical recovery.
+    Supports f=1 (parity), like classic diskless RAID.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum as cs
+
+__all__ = ["FTContext"]
+
+
+def _xor_encode(shards: jax.Array) -> jax.Array:
+    bits = jax.lax.bitcast_convert_type(shards, jnp.int32)
+    parity = bits[0]
+    for i in range(1, shards.shape[0]):
+        parity = parity ^ bits[i]
+    return parity[None]
+
+
+def _xor_recover(shards: jax.Array, parity: jax.Array, failed: int) -> jax.Array:
+    bits = jax.lax.bitcast_convert_type(shards, jnp.int32)
+    acc = parity[0]
+    for i in range(shards.shape[0]):
+        if i != failed:
+            acc = acc ^ bits[i]
+    fixed = jax.lax.bitcast_convert_type(acc, shards.dtype)
+    return shards.at[failed].set(fixed)
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: any
+    checksums: any
+    mode: str
+
+
+class FTContext:
+    """Registry of protected pytrees with encode / fail / recover lifecycle.
+
+    Leaves must be stacked [p, ...] along the shard axis (axis 0).  In the
+    distributed runtime this axis is the data-parallel axis; here the context
+    is mesh-agnostic so it can be tested on a single host and reused by
+    ckpt.diskless for the real sharded path.
+    """
+
+    def __init__(self, p: int, f: int = 1, seed: int = 0):
+        if f >= p:
+            raise ValueError(f"need f < p, got f={f}, p={p}")
+        self.p = p
+        self.f = f
+        self.a = cs.checkpoint_matrix(f, p, seed=seed)
+        self._reg: Dict[str, _Entry] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+    def register(self, name: str, tree, mode: str = "floating_point"):
+        """Protect a pytree; (re-)computes its checksums.
+
+        Modes (paper §2.1/§4.1): `floating_point` (enables on-the-fly ABFT),
+        `gf256` (bit-exact Reed-Solomon over GF(2^8), any f; rules out
+        ABFT), `xor` (f=1 parity special case)."""
+        if mode == "floating_point":
+            enc = jax.tree.map(lambda x: cs.encode(x, self.a), tree)
+        elif mode == "gf256":
+            import numpy as np
+            from repro.core.galois import gf_encode
+            enc = jax.tree.map(
+                lambda x: gf_encode(np.asarray(x), self.f), tree)
+        elif mode == "xor":
+            if self.f != 1:
+                raise ValueError("xor parity supports f=1 only")
+            enc = jax.tree.map(_xor_encode, tree)
+        else:
+            raise ValueError(f"unknown encoding mode {mode!r}")
+        self._reg[name] = _Entry(tree, enc, mode)
+
+    def update(self, name: str, tree):
+        """Refresh a registered value (re-encode)."""
+        self.register(name, tree, self._reg[name].mode)
+
+    def get(self, name: str):
+        return self._reg[name].value
+
+    # -- failure path --------------------------------------------------------
+    def fail(self, indices: Sequence[int], corrupt_to: Optional[float] = None):
+        """Simulate loss of shard `indices` on every registered value."""
+        idx = jnp.asarray(list(indices))
+        fill = jnp.nan if corrupt_to is None else corrupt_to
+        for entry in self._reg.values():
+            entry.value = jax.tree.map(
+                lambda x: x.at[idx].set(jnp.asarray(fill, x.dtype)), entry.value
+            )
+
+    def recover(self, indices: Sequence[int]):
+        """Rebuild the failed shards of every registered value."""
+        if len(indices) > self.f:
+            raise ValueError(
+                f"{len(indices)} failures exceed encoding capacity f={self.f}"
+            )
+        for entry in self._reg.values():
+            if entry.mode == "floating_point":
+                entry.value = jax.tree.map(
+                    lambda x, y: cs.recover(x, y, self.a, indices),
+                    entry.value,
+                    entry.checksums,
+                )
+            elif entry.mode == "gf256":
+                import numpy as np
+                import jax.numpy as jnp
+                from repro.core.galois import gf_recover
+
+                def _fix(x, y):
+                    damaged = np.array(x, copy=True)
+                    # NaN poison is not byte-stable: zero the failed shards
+                    damaged[list(indices)] = 0
+                    return jnp.asarray(gf_recover(damaged, y, indices))
+
+                entry.value = jax.tree.map(_fix, entry.value, entry.checksums)
+            else:
+                (failed,) = indices
+                entry.value = jax.tree.map(
+                    lambda x, y: _xor_recover(x, y, failed),
+                    entry.value,
+                    entry.checksums,
+                )

@@ -1,0 +1,90 @@
+"""Bit-flip detection / location / correction on encoded products (paper §1, §2.2).
+
+Consistency of a fully-encoded C_F at block granularity:
+
+    sum_i cc[j,i] * C_blockrow_i == CS_blockrow_j        (row relation)
+    sum_i cr[j,i] * C_blockcol_i == CS_blockcol_j        (col relation)
+
+A single corrupted element at global (r, c) breaks the row relation at
+(r % mb, c) and the col relation at (r, c % nb); their intersection locates
+it, and the sum-checksum residual (weights of row 0 are all ones) is exactly
+the corruption delta.  Tolerance follows the paper's residual-check scaling
+tau ~ tol_factor * n * eps * |C|.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import EncodingSpec, block_views
+
+__all__ = ["VerifyResult", "verify", "locate_and_correct", "residuals"]
+
+
+class VerifyResult(NamedTuple):
+    consistent: jax.Array      # bool scalar
+    row_residual: jax.Array    # [f, mb, W]
+    col_residual: jax.Array    # [H, f, nb]
+    tol: jax.Array             # scalar threshold used
+
+
+def residuals(c_f: jax.Array, spec: EncodingSpec):
+    rows, cs_rows, cols, cs_cols = block_views(c_f, spec)
+    row_res = (
+        jnp.einsum("fp,pmw->fmw", spec.cc.astype(jnp.float32),
+                   rows.astype(jnp.float32))
+        - cs_rows.astype(jnp.float32)
+    )
+    col_res = (
+        jnp.einsum("fp,hpn->hfn", spec.cr.astype(jnp.float32),
+                   cols.astype(jnp.float32))
+        - cs_cols.astype(jnp.float32)
+    )
+    return row_res, col_res
+
+
+def verify(c_f: jax.Array, spec: EncodingSpec, tol_factor: float = 64.0) -> VerifyResult:
+    """Check checksum consistency of an encoded matrix (jit-safe)."""
+    row_res, col_res = residuals(c_f, spec)
+    n = c_f.shape[-1]
+    eps = jnp.finfo(jnp.float32).eps if c_f.dtype in (jnp.float32, jnp.float64) \
+        else float(jnp.finfo(jnp.bfloat16).eps)
+    # mean-|.| scale: robust to the corrupted element inflating its own
+    # tolerance (a max-scale lets a single huge flip mask itself)
+    scale = jnp.mean(jnp.abs(c_f.astype(jnp.float32))) + 1e-30
+    tol = tol_factor * n * eps * scale
+    bad = jnp.maximum(jnp.max(jnp.abs(row_res)), jnp.max(jnp.abs(col_res)))
+    return VerifyResult(bad <= tol, row_res, col_res, tol)
+
+
+def locate_and_correct(c_f: jax.Array, spec: EncodingSpec, tol_factor: float = 64.0):
+    """Detect, locate, and correct a single corrupted DATA element.
+
+    Returns (corrected_c_f, was_corrupt, (row, col)).  Location uses the
+    sum-checksum (j=0) residuals; the corruption delta is the row residual at
+    the located position.  jit-safe.  (Corruption inside a checksum block is
+    detected too, but correction there is a recompute — see recovery.py.)
+    """
+    res = verify(c_f, spec, tol_factor)
+    row_res, col_res = res.row_residual, res.col_residual
+    f, pr, pc = spec.f, spec.pr, spec.pc
+    h, w = c_f.shape[-2], c_f.shape[-1]
+    mb, nb = h // (pr + f), w // (pc + f)
+
+    # row relation residual: [mb, W] -> (r % mb, c)
+    rr_flat = jnp.argmax(jnp.abs(row_res[0]))
+    rr, c = jnp.unravel_index(rr_flat, row_res[0].shape)
+    # col relation residual: [H, nb] -> (r, c % nb)
+    cr_flat = jnp.argmax(jnp.abs(col_res[:, 0, :]))
+    r, _cb = jnp.unravel_index(cr_flat, (h, nb))
+
+    delta = row_res[0, rr, c]
+    was_corrupt = ~res.consistent
+    corrected = jnp.where(
+        was_corrupt,
+        c_f.at[r, c].add(-delta.astype(c_f.dtype)),
+        c_f,
+    )
+    return corrected, was_corrupt, (r, c)

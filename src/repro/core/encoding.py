@@ -1,0 +1,141 @@
+"""Huang-Abraham matrix encodings (paper §2.2), at block (grid) granularity.
+
+The paper distributes an m-by-n matrix over a pr-by-pc process grid and
+extends it with f checksum *block* rows and columns:
+
+    A_F = [[ A        , A_cs_cols ],        A_cs_rows[j] = sum_i cc[j,i] A_i
+           [ A_cs_rows, corner    ]]        (A_i = i-th block row of A)
+
+so the checksum blocks have the SAME block shape as data blocks and live on
+the extra grid row/col — "(2p-1) of p^2 processes are dedicated".  The
+fundamental identity (Eq. 1):
+
+    encode_block_rows(A) @ encode_block_cols(B) = encode_full(A @ B)
+
+holds exactly in real arithmetic because the encodings are linear maps.
+
+Element-granularity encodings (f single checksum rows/cols, used by the
+per-layer bit-flip path) live in `core.abft_gemm`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksum import checkpoint_matrix
+
+__all__ = [
+    "EncodingSpec",
+    "make_spec",
+    "encode_block_rows",
+    "encode_block_cols",
+    "encode_full",
+    "strip",
+    "split_full",
+    "block_views",
+]
+
+
+class EncodingSpec(NamedTuple):
+    """Checksum weights at block granularity.
+
+    cc: [f, pr]  weights over block-rows  (protects the m dimension)
+    cr: [f, pc]  weights over block-cols  (protects the n dimension)
+    """
+
+    cc: jax.Array
+    cr: jax.Array
+
+    @property
+    def f(self) -> int:
+        return self.cc.shape[0]
+
+    @property
+    def pr(self) -> int:
+        return self.cc.shape[1]
+
+    @property
+    def pc(self) -> int:
+        return self.cr.shape[1]
+
+
+def make_spec(f: int, pr: int, pc: int, seed: int = 0) -> EncodingSpec:
+    return EncodingSpec(
+        cc=checkpoint_matrix(f, pr, seed=seed),
+        cr=checkpoint_matrix(f, pc, seed=seed + 1),
+    )
+
+
+def encode_block_rows(a: jax.Array, cc: jax.Array) -> jax.Array:
+    """[..., pr*mb, K] -> [..., (pr+f)*mb, K]: append f checksum block-rows."""
+    f, pr = cc.shape
+    m, k = a.shape[-2], a.shape[-1]
+    if m % pr:
+        raise ValueError(f"rows {m} not divisible into pr={pr} blocks")
+    mb = m // pr
+    blocks = a.reshape(a.shape[:-2] + (pr, mb, k))
+    cs = jnp.einsum(
+        "fp,...pmk->...fmk", cc.astype(jnp.float32), blocks.astype(jnp.float32)
+    ).astype(a.dtype)
+    out = jnp.concatenate([blocks, cs], axis=-3)
+    return out.reshape(a.shape[:-2] + ((pr + f) * mb, k))
+
+
+def encode_block_cols(b: jax.Array, cr: jax.Array) -> jax.Array:
+    """[..., K, pc*nb] -> [..., K, (pc+f)*nb]: append f checksum block-cols."""
+    f, pc = cr.shape
+    k, n = b.shape[-2], b.shape[-1]
+    if n % pc:
+        raise ValueError(f"cols {n} not divisible into pc={pc} blocks")
+    nb = n // pc
+    blocks = b.reshape(b.shape[:-2] + (k, pc, nb))
+    cs = jnp.einsum(
+        "fp,...kpn->...kfn", cr.astype(jnp.float32), blocks.astype(jnp.float32)
+    ).astype(b.dtype)
+    out = jnp.concatenate([blocks, cs], axis=-2)
+    return out.reshape(b.shape[:-2] + (k, (pc + f) * nb))
+
+
+def encode_full(a: jax.Array, spec: EncodingSpec) -> jax.Array:
+    """Full encoding A_F: checksum block rows AND cols (incl. the corner)."""
+    return encode_block_rows(encode_block_cols(a, spec.cr), spec.cc)
+
+
+def strip(a_f: jax.Array, f_rows_elems: int = 0, f_cols_elems: int = 0) -> jax.Array:
+    """Drop checksum extensions (given in ELEMENT counts: f*mb / f*nb)."""
+    m = a_f.shape[-2] - f_rows_elems
+    n = a_f.shape[-1] - f_cols_elems
+    return a_f[..., :m, :n]
+
+
+def block_views(c_f: jax.Array, spec: EncodingSpec):
+    """Split an encoded matrix into block-stacked views.
+
+    Returns (row_blocks, cs_row_blocks, col_blocks, cs_col_blocks) where
+    row_blocks: [pr, mb, W], cs_row_blocks: [f, mb, W] over the full width W,
+    col_blocks: [H, pc, nb], cs_col_blocks: [H, f, nb] over the full height H.
+    """
+    f, pr, pc = spec.f, spec.pr, spec.pc
+    h, w = c_f.shape[-2], c_f.shape[-1]
+    mb = h // (pr + f)
+    nb = w // (pc + f)
+    rows = c_f.reshape(c_f.shape[:-2] + (pr + f, mb, w))
+    cols = c_f.reshape(c_f.shape[:-2] + (h, pc + f, nb))
+    return rows[..., :pr, :, :], rows[..., pr:, :, :], cols[..., :, :pc, :], cols[..., :, pc:, :]
+
+
+def split_full(c_f: jax.Array, spec: EncodingSpec):
+    """Split into (data, col_cs, row_cs, corner) element views."""
+    f, pr, pc = spec.f, spec.pr, spec.pc
+    h, w = c_f.shape[-2], c_f.shape[-1]
+    mb = h // (pr + f)
+    nb = w // (pc + f)
+    m, n = pr * mb, pc * nb
+    return (
+        c_f[..., :m, :n],
+        c_f[..., :m, n:],
+        c_f[..., m:, :n],
+        c_f[..., m:, n:],
+    )

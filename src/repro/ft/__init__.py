@@ -1,0 +1,2 @@
+from repro.ft.failures import FailureInjector, FailurePlan
+from repro.ft.runtime import FTRuntime, FTPolicy

@@ -1,0 +1,60 @@
+"""Failure injection — the paper's §4.3 "process killer", deterministic or
+randomized.
+
+On real pods, failure *detection* comes from the platform (slice health /
+barrier timeout); this module simulates the *consequence*: a DP shard of the
+registered state is lost (NaN-poisoned) at a chosen step, so the recovery
+paths (diskless checksum solve, disk restore, elastic re-mesh) are exercised
+end-to-end by tests and examples exactly as the paper's stress test
+exercises FT-MPI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FailurePlan", "FailureInjector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Deterministic plan: at step s, lose DP shard i (the paper's fixed
+    EXIT-point mode, 'the most practical and reproducible approach')."""
+    events: Tuple[Tuple[int, int], ...]   # (step, shard_index)
+
+    @classmethod
+    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0):
+        """The stress-test mode: random in time and location (§4.3)."""
+        rng = np.random.RandomState(seed)
+        ev = tuple(sorted(
+            (int(rng.randint(1, max_step)), int(rng.randint(0, p)))
+            for _ in range(n_events)))
+        return cls(ev)
+
+
+class FailureInjector:
+    def __init__(self, plan: FailurePlan):
+        self.plan = plan
+        self._fired: List[Tuple[int, int]] = []
+
+    def check(self, step: int) -> Optional[int]:
+        """Returns the failed shard index if a failure fires at `step`."""
+        for (s, i) in self.plan.events:
+            if s == step and (s, i) not in self._fired:
+                self._fired.append((s, i))
+                return i
+        return None
+
+    @staticmethod
+    def damage(state, shard: int, leading: int):
+        """NaN-poison shard `shard` of every [p, ...] stacked leaf."""
+        def hit(x):
+            if x.ndim >= 1 and x.shape[0] == leading:
+                return x.at[shard].set(jnp.asarray(jnp.nan, x.dtype)) \
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x
+            return x
+        return jax.tree.map(hit, state)

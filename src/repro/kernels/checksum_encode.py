@@ -1,0 +1,61 @@
+"""Weighted-checksum encoder Pallas kernel (the diskless-checkpoint encode).
+
+Computes  Y[j] = sum_i A[j, i] * X[i]  for stacked shards X: [p, m, n] and a
+small checkpoint matrix A: [f, p] — the paper's §2.1 encoding, tiled so each
+(m, n) tile of all p shards streams through VMEM once and produces all f
+checksum tiles (arithmetic intensity ~f, so this kernel is HBM-bound; tiling
+exists to bound VMEM, not to win FLOPs).
+
+Grid: (m/bm, n/bn).  The p axis is rolled into the block: X tile [p, bm, bn]
+must fit VMEM => bm*bn*p*4 <= budget; the wrapper picks bm accordingly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["checksum_encode_pallas"]
+
+
+def _kernel(x_ref, a_ref, y_ref):
+    x = x_ref[...].astype(jnp.float32)          # [p, bm, bn]
+    a = a_ref[...].astype(jnp.float32)          # [f, p]
+    y_ref[...] = jnp.einsum(
+        "fp,pmn->fmn", a, x, preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def checksum_encode_pallas(
+    x: jax.Array,
+    a: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+):
+    """x: [p, m, n], a: [f, p] -> y: [f, m, n] (same dtype as x)."""
+    p, m, n = x.shape
+    f, p2 = a.shape
+    assert p == p2, (x.shape, a.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (
+        f"({m},{n}) not divisible by blocks ({bm},{bn})"
+    )
+    grid = (m // bm, n // bn)
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j)),
+            pl.BlockSpec((f, p), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((f, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((f, m, n), x.dtype),
+        interpret=interpret,
+    )(x, a)
+    return y

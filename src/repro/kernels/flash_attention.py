@@ -1,0 +1,117 @@
+"""Flash-attention forward Pallas kernel (TPU target, interpret-validated).
+
+The XLA-level chunked flash (models/attention.py) streams its fp32
+accumulator through HBM once per KV chunk — the §Perf roofline shows
+prefill cells memory-bound on exactly that traffic.  This kernel is the
+TPU-native fix: the (m, l, acc) online-softmax state lives in VMEM scratch
+for the whole KV sweep; HBM sees only Q/K/V once and O once.
+
+Grid: (B*KV, Sq/bq, Sk/bk), KV-chunk innermost.  GQA is handled by folding
+the q-group into the q-tile rows (bq rows cover g query heads per KV head).
+Causal/window masking is positional, computed from the grid indices.
+
+Structural accounting (per [B,S,H,D] layer, vs the XLA scan):
+    HBM bytes:  kernel ~ 2·B·S·(H+2KV)·D·bytes   (Q,K,V in + O out)
+                XLA    ~ kernel + 2·nk·B·H·S·D·4 (acc carry per chunk)
+    => the kernel removes the dominant prefill memory-term contribution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            k_steps: int, bq: int, bk: int, scale: float, causal: bool,
+            window, softcap):
+    kk = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, D]
+    k = k_ref[0].astype(jnp.float32)          # [bk, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "bq", "bk",
+                     "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,       # [BH, Sq, D]  (batch x heads folded)
+    k: jax.Array,       # [BH, Sk, D]
+    v: jax.Array,       # [BH, Sk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    window=None,
+    softcap=None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+):
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    k_steps = sk // bk
+    grid = (bh, sq // bq, k_steps)
+    kernel = functools.partial(
+        _kernel, k_steps=k_steps, bq=bq, bk=bk, scale=scale, causal=causal,
+        window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m
+            pltpu.VMEM((bq, 1), jnp.float32),    # l
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

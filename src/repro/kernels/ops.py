@@ -1,0 +1,66 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); on CPU (this container)
+they run in interpret mode for correctness, with a pure-XLA fallback for
+shapes the tiling doesn't cover.  `use_pallas` is resolved once per call
+site; benchmarks exercise both paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.abft_matmul import abft_matmul_pallas
+from repro.kernels.checksum_encode import checksum_encode_pallas
+
+__all__ = ["abft_matmul", "checksum_encode", "on_tpu", "pick_blocks"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_blocks(m: int, k: int, n: int, vmem_budget: int = 8 * 2**20):
+    """Largest MXU-aligned blocks whose working set fits the VMEM budget.
+
+    Working set ~ 2*(bm*bk + bk*bn)*in_bytes (double-buffered streams)
+    + bm*bn*4 (fp32 accumulator).  Prefers square-ish C tiles and deep k.
+    """
+    def fits(bm, bn, bk):
+        return 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4 <= vmem_budget
+
+    for bm, bn, bk in [
+        (512, 512, 512), (256, 256, 512), (256, 256, 256),
+        (128, 128, 512), (128, 128, 256), (128, 128, 128),
+    ]:
+        if m % bm == 0 and n % bn == 0 and k % bk == 0 and fits(bm, bn, bk):
+            return bm, bn, bk
+    return None
+
+
+def abft_matmul(a: jax.Array, b: jax.Array, *, force_pallas: bool = False):
+    """C = A @ B with fused column-checksum row -> (c, colsum[n] fp32)."""
+    m, k = a.shape
+    n = b.shape[1]
+    blocks = pick_blocks(m, k, n)
+    if blocks is not None and (on_tpu() or force_pallas):
+        bm, bn, bk = blocks
+        return abft_matmul_pallas(
+            a, b, bm=bm, bn=bn, bk=bk, interpret=not on_tpu()
+        )
+    return ref.abft_matmul_ref(a, b)
+
+
+def checksum_encode(x: jax.Array, a: jax.Array, *, force_pallas: bool = False):
+    """Diskless-checkpoint encode: [p,m,n] x [f,p] -> [f,m,n]."""
+    p, m, n = x.shape
+    ok = m % 128 == 0 and n % 128 == 0
+    if ok and (on_tpu() or force_pallas):
+        # bound VMEM: p * bm * bn * 4 <= 8 MB
+        bm = 128
+        bn = 128
+        while bn * 2 <= n and n % (bn * 2) == 0 and x.shape[0] * bm * bn * 8 < 2**22:
+            bn *= 2
+        return checksum_encode_pallas(x, a, bm=bm, bn=bn, interpret=not on_tpu())
+    return ref.checksum_encode_ref(x, a)

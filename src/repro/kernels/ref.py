@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["abft_matmul_ref", "checksum_encode_ref", "checksum_verify_ref"]
+
+
+def abft_matmul_ref(a: jax.Array, b: jax.Array):
+    """C = A @ B plus its column-sum checksum row (fp32 accumulation).
+
+    Returns (c: [m, n] in result dtype, colsum: [n] fp32) where
+    colsum[j] = sum_i C32[i, j] computed from the fp32 product — exactly what
+    the fused kernel accumulates on the fly.
+    """
+    c32 = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return c32.astype(a.dtype), jnp.sum(c32, axis=0)
+
+
+def checksum_encode_ref(x: jax.Array, a: jax.Array):
+    """Weighted checksums of stacked shards: [p, m, n] x [f, p] -> [f, m, n]."""
+    return jnp.einsum(
+        "fp,pmn->fmn", a.astype(jnp.float32), x.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def checksum_verify_ref(c: jax.Array, colsum: jax.Array):
+    """Max abs residual between colsum(C) and a carried checksum row."""
+    rec = jnp.sum(c.astype(jnp.float32), axis=0)
+    return jnp.max(jnp.abs(rec - colsum.astype(jnp.float32)))

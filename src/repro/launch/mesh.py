@@ -1,0 +1,21 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so smoke tests / benches see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic re-meshing after failures)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

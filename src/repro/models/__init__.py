@@ -1,0 +1,2 @@
+"""Model zoo: one generic layered LM covering all assigned architectures."""
+from repro.models import transformer, attention, moe, mamba, xlstm, layers

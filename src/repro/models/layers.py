@@ -1,0 +1,133 @@
+"""Shared model building blocks (pure functional, no framework deps).
+
+Params are plain nested dicts of jax.Arrays.  Every `*_init` takes a PRNGKey
+and returns params; every `*_apply` is side-effect free.  Big projections go
+through `core.abft_gemm.abft_matmul` when ABFT protection is enabled — that
+is the paper's technique living inside the model as a first-class feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft_gemm import ABFTConfig, abft_matmul, encode_weight
+
+# ---------------------------------------------------------------------------
+# ABFT-protected linear
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: Optional[float] = None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p, x, abft: Optional[ABFTConfig] = None):
+    """y = x @ W (+ b), optionally ABFT-protected.
+
+    When abft.active, W is encoded on the fly (cheap: O(f/n) of the matmul;
+    the training loop can pre-encode once per step instead — see
+    train/step.py which passes pre-encoded weights through `w_enc`).
+    """
+    w = p["w"]
+    if abft is not None and abft.active:
+        w_enc = p.get("w_enc")
+        if w_enc is None:
+            w_enc = encode_weight(w, abft)
+        y, _ok = abft_matmul(x, w_enc, abft)
+    else:
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Rotary embedding. x: [..., S, H, D], positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d_model, scale=d_ff ** -0.5, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, *, activation: str = "silu",
+              abft: Optional[ABFTConfig] = None):
+    g = linear_apply(p["gate"], x, abft)
+    u = linear_apply(p["up"], x, abft)
+    act = jax.nn.silu if activation == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    return linear_apply(p["down"], act(g) * u, abft)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_apply(p_head, x, *, softcap: Optional[float] = None,
+                  abft: Optional[ABFTConfig] = None):
+    logits = linear_apply(p_head, x, abft).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap_fn(x, cap: Optional[float]):
+    return cap * jnp.tanh(x / cap) if cap else x

@@ -1,0 +1,156 @@
+"""Mamba (S6) block for the jamba hybrid architecture.
+
+Selective SSM:  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t
+with per-channel diagonal A (log-parameterized), input-dependent (B, C, dt),
+a depthwise causal conv front, and a SiLU-gated residual branch.
+
+Training/prefill runs a *chunked* scan: sequential lax.scan over chunks of
+`chunk` steps, associative_scan inside the chunk — bounds the materialized
+state tensor to [B, chunk, d_inner, d_state] while keeping the sequential
+depth at S/chunk.  Decode runs the exact single-step recurrence on a carried
+state (the SSM analogue of a KV cache, O(1) per token — why jamba runs the
+long_500k shape).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import linear_apply, linear_init
+
+__all__ = ["MambaSpec", "mamba_init", "mamba_apply", "mamba_decode_step",
+           "mamba_init_state"]
+
+
+class MambaSpec(NamedTuple):
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+
+def mamba_init(key, s: MambaSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    di = s.d_inner
+    # dt bias init so softplus(dt) spans ~[1e-3, 1e-1] (mamba default)
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[4], (di,),
+                                   minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))))
+    return {
+        "in_proj": linear_init(ks[0], s.d_model, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di)) *
+                   (s.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": linear_init(ks[2], di, 2 * s.d_state + 1, dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[3], di, s.d_model, scale=di ** -0.5,
+                                dtype=dtype),
+    }
+
+
+def _conv1d_causal(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B,S,di], w: [K,di].  With `state`
+    ([B, K-1, di], the trailing inputs) performs streaming conv."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return out + b, new_state
+
+
+def _ssm_params(p, xc, s: MambaSpec):
+    """xc: [B,S,di] -> dt [B,S,di], B/C [B,S,ds], A [di,ds]."""
+    proj = linear_apply(p["x_proj"], xc)
+    b_in = proj[..., : s.d_state].astype(jnp.float32)
+    c_in = proj[..., s.d_state : 2 * s.d_state].astype(jnp.float32)
+    dt = jax.nn.softplus(proj[..., -1:].astype(jnp.float32)
+                         + p["dt_bias"][None, None])     # [B,S,di]
+    a = -jnp.exp(p["a_log"])                              # [di,ds]
+    return dt, b_in, c_in, a
+
+
+def mamba_apply(p, x, s: MambaSpec, *, chunk: int = 256, abft=None,
+                return_state: bool = False):
+    """Full-sequence forward. x: [B,S,D] -> y (+ post-sequence state)."""
+    bsz, seq, _ = x.shape
+    xz = linear_apply(p["in_proj"], x, abft)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv1d_causal(xi, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, b_in, c_in, a = _ssm_params(p, xc, s)
+
+    da = jnp.exp(dt[..., None] * a[None, None])                    # [B,S,di,ds]
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_in[..., None, :]
+    # dbx: [B,S,di,ds]
+
+    chunk = min(chunk, seq)
+    pad = (-seq) % chunk
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = (seq + pad) // chunk
+    da_c = da.reshape(bsz, nch, chunk, *da.shape[2:]).swapaxes(0, 1)
+    dbx_c = dbx.reshape(bsz, nch, chunk, *dbx.shape[2:]).swapaxes(0, 1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, inp):
+        da_i, dbx_i = inp                              # [B,chunk,di,ds]
+        acc_a, acc_b = lax.associative_scan(combine, (da_i, dbx_i), axis=1)
+        h_all = acc_b + acc_a * h[:, None]             # [B,chunk,di,ds]
+        return h_all[:, -1], h_all
+
+    h0 = jnp.zeros((bsz, s.d_inner, s.d_state), jnp.float32)
+    h_last, h_chunks = lax.scan(chunk_step, h0, (da_c, dbx_c))
+    h_seq = h_chunks.swapaxes(0, 1).reshape(bsz, seq + pad, s.d_inner, s.d_state)
+    h_seq = h_seq[:, :seq]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, c_in)
+    y = y + p["d_skip"][None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear_apply(p["out_proj"], y, abft)
+    if return_state:
+        return out, {"h": h_last, "conv": conv_state}
+    return out
+
+
+def mamba_init_state(s: MambaSpec, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, s.d_inner, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, s.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(p, x, state, s: MambaSpec, abft=None):
+    """Single-token step. x: [B,1,D] -> (y: [B,1,D], new_state)."""
+    xz = linear_apply(p["in_proj"], x, abft)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _conv1d_causal(xi, p["conv_w"], p["conv_b"],
+                                    state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, b_in, c_in, a = _ssm_params(p, xc, s)
+    da = jnp.exp(dt[:, 0, :, None] * a[None])                 # [B,di,ds]
+    dbx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_in[:, 0, None, :]
+    h = state["h"] * da + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0])
+    y = y + p["d_skip"][None] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    out = linear_apply(p["out_proj"], y, abft)
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with grouped sort-based dispatch (EP-shardable).
+
+Dispatch is *grouped* (GShard lineage): tokens are reshaped to
+[G, Tg, D] groups; G maps onto the data-parallel mesh axes so every group's
+sort/rank/scatter is device-local, and the dispatch buffer
+[G, E, C, D] (G sharded over `data`, E over `model`) turns the scatter into
+XLA's all-to-all dispatch collective — the same communication structure real
+TPU MoE systems use.
+
+Per group (jit-friendly, no [T, E] one-hots):
+  1. router top-k -> (expert_id, weight) per token-slot, N = Tg*k assignments
+  2. stable argsort by expert id; rank-within-expert = pos - group_start
+     (group starts via batched searchsorted — O(E log N), no one-hot)
+  3. scatter into the [E, C, D] capacity buffer (overflow drops, Switch-style)
+  4. expert einsum [g,E,C,D] x [E,D,F]
+  5. gather back by (expert, rank), weighted-combine the k slots.
+
+Capacity C = ceil(Tg*k/E * capacity_factor); small groups (decode) get a
+dropless floor C = N so routing never silently changes decode results.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear_apply, linear_init
+
+__all__ = ["MoESpec", "moe_init", "moe_apply"]
+
+
+class MoESpec(NamedTuple):
+    d_model: int
+    d_ff: int            # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    groups: int = 1      # dispatch groups (set to the DP shard count)
+    activation: str = "silu"
+
+
+def moe_init(key, s: MoESpec, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = s.d_model ** -0.5
+    scale_out = s.d_ff ** -0.5
+    return {
+        "router": linear_init(kr, s.d_model, s.n_experts, dtype=jnp.float32),
+        "gate": (jax.random.normal(kg, (s.n_experts, s.d_model, s.d_ff))
+                 * scale_in).astype(dtype),
+        "up": (jax.random.normal(ku, (s.n_experts, s.d_model, s.d_ff))
+               * scale_in).astype(dtype),
+        "down": (jax.random.normal(kd, (s.n_experts, s.d_ff, s.d_model))
+                 * scale_out).astype(dtype),
+    }
+
+
+def moe_apply(p, x, s: MoESpec, abft=None):
+    """x: [B, S, D] -> (y: [B, S, D], aux_loss scalar)."""
+    b, t, d = x.shape
+    n_tok = b * t
+    g = s.groups if n_tok % max(s.groups, 1) == 0 else 1
+    tg = n_tok // g
+    xg = x.reshape(g, tg, d)
+
+    logits = linear_apply(p["router"], xg.astype(jnp.float32))   # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, s.top_k)                 # [G,Tg,k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e, averaged over groups
+    me = jnp.mean(probs, axis=1)                                  # [G,E]
+    one_hot_tops = jax.nn.one_hot(top_e, s.n_experts, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot_tops, axis=2), axis=1) / s.top_k  # [G,E]
+    aux = s.n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # ---- grouped sort-based dispatch ---------------------------------------
+    n = tg * s.top_k
+    flat_e = top_e.reshape(g, n)                                  # [G,N]
+    flat_w = top_w.reshape(g, n)
+    tok_of = jnp.broadcast_to(
+        (jnp.arange(n, dtype=jnp.int32) // s.top_k)[None], (g, n))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)             # [G,N]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(tok_of, order, axis=-1)
+    starts = jax.vmap(
+        lambda a: jnp.searchsorted(a, jnp.arange(s.n_experts), side="left")
+    )(sorted_e)                                                   # [G,E]
+    rank = (jnp.arange(n, dtype=jnp.int32)[None]
+            - jnp.take_along_axis(starts, sorted_e, axis=-1))     # [G,N]
+
+    if n <= 4096:
+        capacity = n  # dropless floor: decode/tiny batches stay exact
+    else:
+        capacity = max(math.ceil(n / s.n_experts * s.capacity_factor),
+                       s.top_k)
+    keep = rank < capacity
+    safe_rank = jnp.where(keep, rank, capacity - 1)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], (g, n))
+    src = (jnp.take_along_axis(xg, sorted_tok[..., None], axis=1)
+           * keep[..., None].astype(x.dtype))                     # [G,N,D]
+    buf = jnp.zeros((g, s.n_experts, capacity, d), x.dtype)
+    buf = buf.at[gi, sorted_e, safe_rank].add(src)
+
+    # ---- expert compute (E sharded over the EP/model axis) -----------------
+    act = jax.nn.silu if s.activation == "silu" else jax.nn.gelu
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(x.dtype))
+    h = act(gate) * up
+    out = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
+
+    # ---- combine ------------------------------------------------------------
+    gathered = out[gi, sorted_e, safe_rank] * keep[..., None].astype(x.dtype)
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=-1)
+    y_sorted = gathered * w_sorted[..., None].astype(x.dtype)
+    yg = jnp.zeros((g, tg, d), x.dtype)
+    yg = yg.at[gi, sorted_tok].add(y_sorted)
+    return yg.reshape(b, t, d), aux

@@ -1,0 +1,238 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar memory,
+sequential) — Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM recurrence (per head):
+    C_t = f_t C_{t-1} + i_t (k_t v_t^T)      C: [d_k, d_v] matrix memory
+    n_t = f_t n_{t-1} + i_t k_t
+    y_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+
+Training/prefill uses the exact *chunkwise* form (linear-attention style):
+intra-chunk quadratic with decay masks + inter-chunk carried state; decode is
+the O(1) recurrence.  Gates use stabilized sigmoid parameterization (see
+DESIGN.md §Arch-applicability: the exp-gate max-stabilizer of the paper is a
+numerics refinement; the chunkwise algebra here is exact for the gates used).
+
+sLSTM: per-head scalar recurrence with exp input gate and a normalizer state;
+inherently sequential -> lax.scan over time (its design point; why xlstm-350m
+runs the long_500k shape with O(1) state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import linear_apply, linear_init, rmsnorm_apply, rmsnorm_init
+
+__all__ = ["XLSTMSpec", "mlstm_init", "mlstm_apply", "mlstm_decode_step",
+           "mlstm_init_state", "slstm_init", "slstm_apply",
+           "slstm_decode_step", "slstm_init_state"]
+
+
+class XLSTMSpec(NamedTuple):
+    d_model: int
+    n_heads: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# =========================================================================
+# mLSTM
+# =========================================================================
+
+def mlstm_init(key, s: XLSTMSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d = s.d_model
+    return {
+        "wq": linear_init(ks[0], d, d, dtype=dtype),
+        "wk": linear_init(ks[1], d, d, dtype=dtype),
+        "wv": linear_init(ks[2], d, d, dtype=dtype),
+        "wi": linear_init(ks[3], d, s.n_heads, dtype=jnp.float32),
+        "wf": linear_init(ks[4], d, s.n_heads, dtype=jnp.float32),
+        "wo": linear_init(ks[5], d, d, dtype=dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, s: XLSTMSpec, abft=None):
+    b, t, _ = x.shape
+    nh, hd = s.n_heads, s.head_dim
+    q = linear_apply(p["wq"], x, abft).reshape(b, t, nh, hd)
+    k = linear_apply(p["wk"], x, abft).reshape(b, t, nh, hd) * hd ** -0.5
+    v = linear_apply(p["wv"], x, abft).reshape(b, t, nh, hd)
+    i_gate = jax.nn.sigmoid(linear_apply(p["wi"], x.astype(jnp.float32)))  # [B,T,H]
+    f_gate = jax.nn.sigmoid(linear_apply(p["wf"], x.astype(jnp.float32)) + 3.0)
+    return q, k, v, i_gate, f_gate
+
+
+def mlstm_apply(p, x, s: XLSTMSpec, *, chunk: int = 128, abft=None,
+                return_state: bool = False):
+    """Chunkwise-parallel forward. x: [B,S,D] -> [B,S,D] (+ final state)."""
+    b, t, d = x.shape
+    nh, hd = s.n_heads, s.head_dim
+    q, k, v, ig, fg = _mlstm_qkvif(p, x, s, abft)
+
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        z2 = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, ig = z2(q), z2(k), z2(v), z2(ig)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    tt = t + pad
+    nc = tt // chunk
+    # [B,T,...] -> [NC, B, L, ...]
+    cs = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(cs, (q, k, v, ig, fg))
+
+    def chunk_step(carry, inp):
+        c_state, n_state = carry          # [B,H,dk,dv], [B,H,dk]
+        qi, ki, vi, ii, fi = inp          # [B,L,H,*]
+        lf = jnp.log(jnp.maximum(fi.astype(jnp.float32), 1e-12))  # [B,L,H]
+        cum = jnp.cumsum(lf, axis=1)                               # log prod f_1..f_t
+        # decay from chunk start to step t (inclusive): exp(cum_t)
+        dec_in = jnp.exp(cum)                                      # [B,L,H]
+        # pairwise decay D_ts = prod_{r=s+1..t} f_r * i_s  (t >= s)
+        pair = cum[:, :, None, :] - cum[:, None, :, :]             # [B,L,L,H]
+        tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmask = jnp.where(tril[None, :, :, None], jnp.exp(pair), 0.0)
+        dmask = dmask * ii[:, None, :, :]                          # apply i_s
+
+        q32, k32, v32 = (a.astype(jnp.float32) for a in (qi, ki, vi))
+        # intra-chunk: y_t = sum_{s<=t} D_ts (q_t . k_s) v_s
+        scores = jnp.einsum("blhd,bmhd->blmh", q32, k32) * dmask
+        y_intra = jnp.einsum("blmh,bmhd->blhd", scores, v32)
+        # inter-chunk: y_t += dec_in_t * q_t^T C_prev
+        y_inter = jnp.einsum("blhd,bhde->blhe", q32, c_state) * dec_in[..., None]
+        num = y_intra + y_inter                                    # [B,L,H,dv]
+        # normalizer: n_t = (prod f) n_prev + sum_{s<=t} D_ts k_s
+        n_vec = jnp.einsum("blmh,bmhd->blhd", dmask, k32)
+        n_tot = n_vec + n_state[:, None] * dec_in[..., None]
+        den = jnp.abs(jnp.einsum("blhd,blhd->blh", q32, n_tot))
+        y = num / jnp.maximum(den, 1.0)[..., None]
+
+        # carry update: C_new = (prod f) C_prev + sum_s (prod_{r>s} f) i_s k_s v_s^T
+        tot = jnp.exp(cum[:, -1])                                  # [B,H]
+        rem = jnp.exp(cum[:, -1:, :] - cum)                        # decay s..end
+        w_s = rem * ii                                             # [B,L,H]
+        c_new = c_state * tot[..., None, None] + jnp.einsum(
+            "blh,blhd,blhe->bhde", w_s, k32, v32)
+        n_new = n_state * tot[..., None] + jnp.einsum(
+            "blh,blhd->bhd", w_s, k32)
+        return (c_new, n_new), y
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    (c_f, n_f), ys = lax.scan(chunk_step, (c0, n0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(b, tt, nh, hd)[:, :t]
+    y = rmsnorm_apply(p["norm"], y.reshape(b, t, d).astype(x.dtype))
+    out = linear_apply(p["wo"], y, abft)
+    if return_state:
+        return out, {"c": c_f, "n": n_f}
+    return out
+
+
+def mlstm_init_state(s: XLSTMSpec, batch: int):
+    return {
+        "c": jnp.zeros((batch, s.n_heads, s.head_dim, s.head_dim), jnp.float32),
+        "n": jnp.zeros((batch, s.n_heads, s.head_dim), jnp.float32),
+    }
+
+
+def mlstm_decode_step(p, x, state, s: XLSTMSpec, abft=None):
+    """x: [B,1,D] -> (y: [B,1,D], new_state). Exact recurrence."""
+    b = x.shape[0]
+    nh, hd = s.n_heads, s.head_dim
+    q, k, v, ig, fg = _mlstm_qkvif(p, x, s, abft)
+    q32, k32, v32 = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    i0, f0 = ig[:, 0], fg[:, 0]                                   # [B,H]
+    c = state["c"] * f0[..., None, None] + i0[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])
+    n = state["n"] * f0[..., None] + i0[..., None] * k32
+    num = jnp.einsum("bhd,bhde->bhe", q32, c)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n))
+    y = num / jnp.maximum(den, 1.0)[..., None]
+    y = y.reshape(b, 1, s.d_model).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y)
+    return linear_apply(p["wo"], y, abft), {"c": c, "n": n}
+
+
+# =========================================================================
+# sLSTM
+# =========================================================================
+
+def slstm_init(key, s: XLSTMSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d = s.d_model
+    return {
+        "wz": linear_init(ks[0], d, d, dtype=dtype),
+        "wi": linear_init(ks[1], d, s.n_heads, dtype=jnp.float32),
+        "wf": linear_init(ks[2], d, s.n_heads, dtype=jnp.float32),
+        "wo_gate": linear_init(ks[3], d, d, dtype=dtype),
+        "wout": linear_init(ks[4], d, d, dtype=dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_init_state(s: XLSTMSpec, batch: int):
+    return {
+        "c": jnp.zeros((batch, s.n_heads, s.head_dim), jnp.float32),
+        "n": jnp.zeros((batch, s.n_heads), jnp.float32),
+        "m": jnp.full((batch, s.n_heads), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(z, i_pre, f_pre, state, s: XLSTMSpec):
+    """One sLSTM step with exp gating + max stabilizer (log-space)."""
+    c, n, m = state["c"], state["n"], state["m"]
+    logf = -jax.nn.softplus(-f_pre)           # log sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s[..., None] * c + i_s[..., None] * jnp.tanh(z)
+    n_new = f_s * n + i_s
+    h = c_new / jnp.maximum(n_new, 1.0)[..., None]
+    return {"c": c_new, "n": n_new, "m": m_new}, h
+
+
+def slstm_apply(p, x, s: XLSTMSpec, abft=None, return_state: bool = False):
+    """Sequential forward (scan over time). x: [B,S,D] -> [B,S,D]."""
+    b, t, d = x.shape
+    nh, hd = s.n_heads, s.head_dim
+    z = linear_apply(p["wz"], x, abft).reshape(b, t, nh, hd).astype(jnp.float32)
+    i_pre = linear_apply(p["wi"], x.astype(jnp.float32))
+    f_pre = linear_apply(p["wf"], x.astype(jnp.float32))
+    o_gate = jax.nn.sigmoid(linear_apply(p["wo_gate"], x, abft).astype(jnp.float32))
+
+    def step(state, inp):
+        z_t, i_t, f_t = inp
+        state, h = _slstm_cell(z_t, i_t, f_t, state, s)
+        return state, h
+
+    state0 = slstm_init_state(s, b)
+    state_f, hs = lax.scan(step, state0,
+                           (z.swapaxes(0, 1), i_pre.swapaxes(0, 1),
+                            f_pre.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).reshape(b, t, d)
+    y = (h * o_gate).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y)
+    out = linear_apply(p["wout"], y, abft)
+    if return_state:
+        return out, state_f
+    return out
+
+
+def slstm_decode_step(p, x, state, s: XLSTMSpec, abft=None):
+    b = x.shape[0]
+    nh, hd = s.n_heads, s.head_dim
+    z = linear_apply(p["wz"], x, abft).reshape(b, 1, nh, hd).astype(jnp.float32)
+    i_pre = linear_apply(p["wi"], x.astype(jnp.float32))[:, 0]
+    f_pre = linear_apply(p["wf"], x.astype(jnp.float32))[:, 0]
+    o_gate = jax.nn.sigmoid(linear_apply(p["wo_gate"], x, abft).astype(jnp.float32))
+    state, h = _slstm_cell(z[:, 0], i_pre, f_pre, state, s)
+    y = (h.reshape(b, 1, s.d_model) * o_gate).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y)
+    return linear_apply(p["wout"], y, abft), state

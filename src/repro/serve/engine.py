@@ -1,0 +1,148 @@
+"""Continuous-batching serving engine with ABFT-verified projections.
+
+vLLM-style slot scheduler on top of the framework's decode path:
+  * fixed decode batch of `slots`; every engine step decodes ONE token for
+    all occupied slots (per-slot positions — slots are never in lockstep),
+  * a finished slot (max_new_tokens or EOS) retires immediately and a queued
+    request is admitted: its prompt is prefilled as a single sequence and
+    the resulting KV cache is scattered into the freed slot,
+  * the whole engine state (batched caches, per-slot positions) lives in
+    fixed-shape device arrays — two compiled programs total (prefill_1,
+    decode_B), no recompilation as requests come and go,
+  * `abft_mode="verify"` carries Huang-Abraham checksum columns through
+    every projection of both programs (silent-corruption detection while
+    serving — the paper's technique in the serving path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.train.step import StepOptions
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, abft_mode: str = "off"):
+        assert cfg.n_enc_layers == 0, "engine serves decoder-only archs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.abft = StepOptions(abft_mode=abft_mode).abft
+
+        self.cache = tf.init_cache(cfg, slots, max_len)
+        # force vector per-slot indices (init_cache makes scalars)
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda p, x: jnp.zeros((x.shape[0], slots), jnp.int32)
+            if (p and getattr(p[-1], "key", None) == "index") else x,
+            self.cache)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: Deque[Request] = deque()
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = {}  # len -> jitted prefill (bucketed)
+
+    # -- public ---------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until queue + slots drain; returns finished requests."""
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not any(self.active):
+                if not self.queue:
+                    break
+                continue
+            self._step(finished)
+        return finished
+
+    # -- internals --------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            bucket = self._bucket(plen)
+            if bucket not in self._prefill:
+                self._prefill[bucket] = jax.jit(
+                    lambda pr, tok, ln, _b=bucket: self._prefill_impl(pr, tok, ln, _b))
+            prompt = jnp.zeros((1, bucket), jnp.int32).at[0, :plen].set(
+                jnp.asarray(req.prompt, jnp.int32))
+            logits, small_cache = self._prefill[bucket](
+                self.params, prompt, jnp.asarray(plen, jnp.int32))
+            self._scatter_slot(s, small_cache, plen)
+            tok = int(jnp.argmax(logits[0, plen - 1]))
+            req.output.append(tok)
+            self.tokens = self.tokens.at[s, 0].set(tok)
+            self.pos = self.pos.at[s].set(plen)
+            self.active[s] = req
+
+    def _prefill_impl(self, params, prompt, plen, bucket):
+        cache = tf.init_cache(self.cfg, 1, self.max_len)
+        logits, new_cache, _ = tf.forward(params, prompt, self.cfg,
+                                          cache=cache, abft=self.abft)
+        return logits, new_cache
+
+    def _scatter_slot(self, s: int, small_cache, plen: int):
+        def put(path, big, small):
+            key = getattr(path[-1], "key", None)
+            if key == "index":
+                return big.at[..., s].set(plen)
+            # leading dims: [repeats, B(slots), ...] <- [repeats, 1, ...]
+            return big.at[:, s].set(small[:, 0].astype(big.dtype))
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda p, b, sm: put(p, b, sm), self.cache, small_cache)
+
+    def _decode_impl(self, params, tokens, pos, cache):
+        return tf.decode_step(params, tokens, pos, cache, self.cfg,
+                              abft=self.abft)
+
+    def _step(self, finished: List[Request]):
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.pos, self.cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.pos = self.pos + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        self.tokens = next_tok[:, None]
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(next_tok[s])
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos \
+                    or int(self.pos[s]) >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[s] = None

@@ -1,0 +1,5 @@
+"""Training: optimizer + step builders."""
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.step import (StepOptions, build_prefill_step,
+                              build_serve_step, build_train_step, init_state,
+                              make_inputs)

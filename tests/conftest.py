@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — the main pytest process must
+see 1 CPU device (multi-device tests go through subprocesses, and only
+launch/dryrun.py forces 512 placeholder devices)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rs():
+    return np.random.RandomState(0)

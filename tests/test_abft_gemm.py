@@ -1,0 +1,68 @@
+"""Layer-level ABFT matmul (the LM integration of the paper's technique)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft_gemm import (ABFTConfig, abft_matmul, correct_output,
+                                  encode_weight, verify_output)
+
+
+@pytest.mark.parametrize("mode", ["off", "checksum", "verify", "correct"])
+def test_modes_preserve_result(rs, mode):
+    cfg = ABFTConfig(mode=mode, f=2)
+    W = jnp.asarray(rs.standard_normal((32, 48)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((8, 32)), jnp.float32)
+    w_in = encode_weight(W, cfg) if cfg.active else W
+    Y, ok = abft_matmul(X, w_in, cfg)
+    np.testing.assert_allclose(np.asarray(Y), np.asarray(X @ W),
+                               rtol=1e-5, atol=1e-4)
+    if mode in ("verify", "correct"):
+        assert bool(ok)
+
+
+def test_flip_detect_and_correct(rs):
+    cfg = ABFTConfig(mode="correct", f=2)
+    W = jnp.asarray(rs.standard_normal((32, 48)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((8, 32)), jnp.float32)
+    yf = X @ encode_weight(W, cfg)
+    y, ycs = yf[:, :-2], yf[:, -2:]
+    for (r, c, d) in [(0, 0, 100.0), (7, 47, -3e3), (3, 20, 1e5)]:
+        y_bad = y.at[r, c].add(d)
+        ok, res = verify_output(y_bad, ycs, cfg)
+        assert not bool(ok)
+        y_fix = correct_output(y_bad, ycs, res, cfg)
+        # correction is exact up to the ulp of the corrupted magnitude
+        # (fp32 cancellation when undoing a huge delta)
+        np.testing.assert_allclose(np.asarray(y_fix), np.asarray(X @ W),
+                                   rtol=1e-4, atol=max(1e-3, abs(d) * 1e-7))
+
+
+def test_verify_under_jit(rs):
+    cfg = ABFTConfig(mode="verify", f=2)
+    W = jnp.asarray(rs.standard_normal((16, 24)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((4, 16)), jnp.float32)
+    w_enc = encode_weight(W, cfg)
+
+    @jax.jit
+    def f(x, w):
+        return abft_matmul(x, w, cfg)
+
+    y, ok = f(X, w_enc)
+    assert bool(ok)
+
+
+def test_grad_flows_through_protected_matmul(rs):
+    """ABFT must not break training: gradients flow through the checksum."""
+    cfg = ABFTConfig(mode="checksum", f=2)
+    W = jnp.asarray(rs.standard_normal((16, 24)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((4, 16)), jnp.float32)
+
+    def loss(w):
+        y, _ = abft_matmul(X, encode_weight(w, cfg), cfg)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(W)
+    g_ref = jax.grad(lambda w: jnp.sum((X @ w) ** 2))(W)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,87 @@
+"""Attention paths: flash (custom-vjp FA-2) vs dense, incl. grads, GQA,
+sliding windows, softcap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (_mask, _sdpa_dense, _sdpa_flash,
+                                    AttnSpec, attn_apply, attn_init, make_cache)
+
+CASES = [
+    dict(causal=True, window=None, softcap=None),
+    dict(causal=True, window=24, softcap=None),
+    dict(causal=True, window=None, softcap=30.0),
+    dict(causal=False, window=None, softcap=None),
+    dict(causal=True, window=7, softcap=50.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("kc", [16, 32, 96])
+def test_flash_matches_dense_fwd_bwd(rs, case, kc):
+    B, Sq, KV, g, D = 2, 96, 2, 3, 16
+    q = jnp.asarray(rs.standard_normal((B, Sq, KV, g, D)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((B, Sq, KV, D)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((B, Sq, KV, D)), jnp.float32)
+    pos = jnp.arange(Sq)
+    scale = D ** -0.5
+    mask = _mask(pos, pos, causal=case["causal"], window=case["window"])
+
+    def dense(q, k, v):
+        return _sdpa_dense(q, k, v, scale=scale, softcap=case["softcap"],
+                           mask=mask).astype(jnp.float32)
+
+    def flash(q, k, v):
+        return _sdpa_flash(q, k, v, scale=scale, softcap=case["softcap"],
+                           q_pos=pos, k_pos=pos, causal=case["causal"],
+                           window=case["window"], kc=kc).astype(jnp.float32)
+
+    np.testing.assert_allclose(np.asarray(flash(q, k, v)),
+                               np.asarray(dense(q, k, v)),
+                               rtol=1e-4, atol=1e-4)
+    ct = jnp.asarray(rs.standard_normal((B, Sq, KV, g, D)), jnp.float32)
+    gd = jax.grad(lambda *a: jnp.sum(dense(*a) * ct), argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(lambda *a: jnp.sum(flash(*a) * ct), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gd, gf):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_gqa_equivalent_to_repeated_kv(rs):
+    """GQA with n_kv < n_heads == MHA with KV heads repeated."""
+    spec = AttnSpec(d_model=32, n_heads=4, n_kv=2, head_dim=8)
+    key = jax.random.PRNGKey(0)
+    p = attn_init(key, spec)
+    x = jnp.asarray(rs.standard_normal((2, 10, 32)), jnp.float32)
+    y, _ = attn_apply(p, x, spec, positions=jnp.arange(10))
+    # build the MHA-equivalent params by repeating kv projections
+    spec_mha = AttnSpec(d_model=32, n_heads=4, n_kv=4, head_dim=8)
+    rep = lambda w: jnp.concatenate(
+        [jnp.repeat(w.reshape(32, 2, 8), 2, axis=1).reshape(32, 32)], axis=-1)
+    p_mha = {"wq": p["wq"],
+             "wk": {"w": rep(p["wk"]["w"])},
+             "wv": {"w": rep(p["wv"]["w"])},
+             "wo": p["wo"]}
+    y2, _ = attn_apply(p_mha, x, spec_mha, positions=jnp.arange(10))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_cache_window(rs):
+    """Sliding-window decode via cache matches windowed full attention."""
+    spec = AttnSpec(d_model=16, n_heads=2, n_kv=2, head_dim=8, window=4)
+    key = jax.random.PRNGKey(1)
+    p = attn_init(key, spec)
+    S = 12
+    x = jnp.asarray(rs.standard_normal((1, S, 16)), jnp.float32)
+    y_full, _ = attn_apply(p, x, spec, positions=jnp.arange(S))
+    cache = make_cache(1, S, 2, 8, jnp.float32)
+    outs = []
+    for i in range(S):
+        yi, cache = attn_apply(p, x[:, i:i + 1], spec,
+                               positions=jnp.arange(i, i + 1), cache=cache)
+        outs.append(yi)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)

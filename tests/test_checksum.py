@@ -1,0 +1,59 @@
+"""Weighted-checksum algebra (paper §2.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checksum as cs
+
+
+@pytest.mark.parametrize("f,p", [(1, 4), (2, 8), (3, 8)])
+def test_encode_recover_exact(rs, f, p):
+    a = cs.checkpoint_matrix(f, p)
+    x = jnp.asarray(rs.standard_normal((p, 6, 5)), jnp.float32)
+    y = cs.encode(x, a)
+    failed = list(range(f))  # worst case: f simultaneous failures
+    xf = x.at[jnp.asarray(failed)].set(jnp.nan)
+    xr = cs.recover(xf, y, a, failed)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_recover_any_failure_subset(rs):
+    f, p = 2, 6
+    a = cs.checkpoint_matrix(f, p)
+    x = jnp.asarray(rs.standard_normal((p, 4, 4)), jnp.float32)
+    y = cs.encode(x, a)
+    for failed in [[0], [5], [1, 4], [2, 3], [0, 5]]:
+        xf = x.at[jnp.asarray(failed)].set(1e9)
+        xr = cs.recover(xf, y, a, failed)
+        np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_capacity_exceeded_raises(rs):
+    a = cs.checkpoint_matrix(1, 4)
+    x = jnp.asarray(rs.standard_normal((4, 3)), jnp.float32)
+    y = cs.encode(x, a)
+    with pytest.raises(ValueError):
+        cs.recover(x, y, a, [0, 1])
+
+
+def test_checkpoint_matrix_row0_is_sum():
+    a = cs.checkpoint_matrix(3, 7)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.ones(7, np.float32))
+
+
+def test_pytree_roundtrip(rs):
+    f, p = 2, 4
+    a = cs.checkpoint_matrix(f, p)
+    tree = {"w": jnp.asarray(rs.standard_normal((p, 8)), jnp.float32),
+            "b": {"x": jnp.asarray(rs.standard_normal((p, 2, 3)), jnp.float32)}}
+    enc = cs.encode_pytree(tree, a)
+    damaged = {"w": tree["w"].at[1].set(jnp.nan),
+               "b": {"x": tree["b"]["x"].at[1].set(jnp.nan)}}
+    rec = cs.recover_pytree(damaged, enc, a, [1])
+    np.testing.assert_allclose(np.asarray(rec["w"]), np.asarray(tree["w"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rec["b"]["x"]),
+                               np.asarray(tree["b"]["x"]),
+                               rtol=1e-4, atol=1e-4)

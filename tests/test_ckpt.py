@@ -1,0 +1,54 @@
+"""Disk checkpointing: async atomic saves, keep-k GC, restore, aux state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.disk import CheckpointManager
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros(3)},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    s = _state(1.5)
+    mgr.save(10, s, aux={"data_step": 10}, blocking=True)
+    like = jax.eval_shape(lambda: s)
+    r = mgr.restore(10, like)
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(s["params"]["w"]))
+    assert mgr.aux(10)["data_step"] == 10
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for i in range(5):
+        mgr.save(i, _state(float(i)), blocking=True)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_does_not_block(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(1, _state(2.0), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(0, _state(), blocking=True)
+    bad_like = {"params": {"w": jax.ShapeDtypeStruct((2, 2), jnp.float32),
+                           "b": jax.ShapeDtypeStruct((3,), jnp.float32)},
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(AssertionError):
+        mgr.restore(0, bad_like)
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(7, _state(), blocking=True)
+    assert not list(tmp_path.glob("*.tmp"))

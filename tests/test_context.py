@@ -1,0 +1,66 @@
+"""FTContext — the paper's ABFT-BLAS framework lifecycle (§4.1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.context import FTContext
+
+
+def _tree(rs, p=4):
+    return {"a": jnp.asarray(rs.standard_normal((p, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(rs.standard_normal((p, 4, 2)), jnp.float32)}}
+
+
+@pytest.mark.parametrize("mode", ["floating_point", "gf256", "xor"])
+def test_register_fail_recover(rs, mode):
+    p = 4
+    ctx = FTContext(p, f=1)
+    tree = _tree(rs, p)
+    ctx.register("state", tree, mode=mode)
+    ctx.fail([2], corrupt_to=0.0 if mode == "gf256" else None)
+    ctx.recover([2])
+    rec = ctx.get("state")
+    tol = 0 if mode in ("gf256", "xor") else 1e-5
+    np.testing.assert_allclose(np.asarray(rec["a"]), np.asarray(tree["a"]),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(rec["b"]["c"]),
+                               np.asarray(tree["b"]["c"]), atol=tol)
+
+
+def test_gf256_multi_failure_bit_exact(rs):
+    p = 6
+    ctx = FTContext(p, f=2)
+    tree = _tree(rs, p)
+    ctx.register("s", tree, mode="gf256")
+    ctx.fail([1, 4], corrupt_to=0.0)
+    ctx.recover([1, 4])
+    np.testing.assert_array_equal(
+        np.asarray(ctx.get("s")["a"]).view(np.uint8),
+        np.asarray(tree["a"]).view(np.uint8))
+
+
+def test_update_reencodes(rs):
+    ctx = FTContext(4, f=1)
+    tree = _tree(rs)
+    ctx.register("s", tree)
+    tree2 = {"a": tree["a"] * 2, "b": {"c": tree["b"]["c"] * 2}}
+    ctx.update("s", tree2)
+    ctx.fail([0])
+    ctx.recover([0])
+    np.testing.assert_allclose(np.asarray(ctx.get("s")["a"]),
+                               np.asarray(tree2["a"]), atol=1e-5)
+
+
+def test_capacity_guard(rs):
+    ctx = FTContext(4, f=1)
+    ctx.register("s", _tree(rs))
+    with pytest.raises(ValueError):
+        ctx.recover([0, 1])
+
+
+def test_invalid_modes(rs):
+    ctx = FTContext(4, f=2)
+    with pytest.raises(ValueError):
+        ctx.register("s", _tree(rs), mode="xor")  # xor is f=1 only
+    with pytest.raises(ValueError):
+        FTContext(4, f=4)  # need f < p

@@ -1,0 +1,55 @@
+"""Bit-flip detection / location / correction (paper §1, §2.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import detect, encoding as enc
+
+
+def _encoded(rs, f=1, pr=3, pc=3, mb=8, nb=8):
+    spec = enc.make_spec(f, pr, pc)
+    x = jnp.asarray(rs.standard_normal((pr * mb, pc * nb)), jnp.float32)
+    return x, enc.encode_full(x, spec), spec
+
+
+def test_clean_matrix_verifies(rs):
+    _, xf, spec = _encoded(rs)
+    assert bool(detect.verify(xf, spec).consistent)
+
+
+@pytest.mark.parametrize("r,c,delta", [(0, 0, 100.0), (13, 17, -55.0),
+                                       (23, 5, 1e4)])
+def test_flip_detected_located_corrected(rs, r, c, delta):
+    x, xf, spec = _encoded(rs)
+    bad = xf.at[r, c].add(delta)
+    res = detect.verify(bad, spec)
+    assert not bool(res.consistent)
+    fixed, was_corrupt, (rr, cc) = detect.locate_and_correct(bad, spec)
+    assert bool(was_corrupt)
+    assert (int(rr), int(cc)) == (r, c)
+    np.testing.assert_allclose(np.asarray(enc.strip(fixed, 8, 8)),
+                               np.asarray(x), rtol=1e-4, atol=1e-3)
+
+
+def test_correct_is_noop_when_clean(rs):
+    x, xf, spec = _encoded(rs)
+    fixed, was_corrupt, _ = detect.locate_and_correct(xf, spec)
+    assert not bool(was_corrupt)
+    np.testing.assert_array_equal(np.asarray(fixed), np.asarray(xf))
+
+
+def test_small_flip_below_threshold_tolerated(rs):
+    """The residual check has a noise floor — eps-scale flips are accepted
+    (they are indistinguishable from roundoff, per the paper's fp argument)."""
+    _, xf, spec = _encoded(rs)
+    bad = xf.at[3, 3].add(1e-6)
+    assert bool(detect.verify(bad, spec).consistent)
+
+
+def test_bf16_tolerance(rs):
+    spec = enc.make_spec(1, 2, 2)
+    x = jnp.asarray(rs.standard_normal((8, 8)), jnp.bfloat16)
+    xf = enc.encode_full(x, spec)
+    assert bool(detect.verify(xf, spec).consistent)
+    bad = xf.at[1, 2].add(jnp.asarray(50.0, jnp.bfloat16))
+    assert not bool(detect.verify(bad, spec).consistent)

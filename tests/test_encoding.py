@@ -1,0 +1,45 @@
+"""Block encodings + the fundamental ABFT identity (paper Eq. 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding as enc
+
+
+@pytest.mark.parametrize("f,pr,pc", [(1, 3, 3), (2, 4, 2)])
+def test_product_of_encodings_is_encoded_product(rs, f, pr, pc):
+    """encode_rows(A) @ encode_cols(B) == encode_full(A @ B)  (Eq. 1)."""
+    spec = enc.make_spec(f, pr, pc)
+    mb, nb, k = 8, 16, 32
+    A = jnp.asarray(rs.standard_normal((pr * mb, k)), jnp.float32)
+    B = jnp.asarray(rs.standard_normal((k, pc * nb)), jnp.float32)
+    lhs = enc.encode_block_rows(A, spec.cc) @ enc.encode_block_cols(B, spec.cr)
+    rhs = enc.encode_full(A @ B, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_encoding_linearity(rs):
+    """The encodings are linear maps: enc(aX + bY) = a enc(X) + b enc(Y)."""
+    spec = enc.make_spec(1, 4, 4)
+    x = jnp.asarray(rs.standard_normal((16, 16)), jnp.float32)
+    y = jnp.asarray(rs.standard_normal((16, 16)), jnp.float32)
+    a, b = 2.5, -1.25
+    lhs = enc.encode_full(a * x + b * y, spec)
+    rhs = a * enc.encode_full(x, spec) + b * enc.encode_full(y, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_strip_inverts_encode(rs):
+    spec = enc.make_spec(1, 3, 3)
+    x = jnp.asarray(rs.standard_normal((12, 9)), jnp.float32)
+    xf = enc.encode_full(x, spec)
+    np.testing.assert_array_equal(np.asarray(enc.strip(xf, 4, 3)),
+                                  np.asarray(x))
+
+
+def test_indivisible_raises(rs):
+    spec = enc.make_spec(1, 3, 3)
+    with pytest.raises(ValueError):
+        enc.encode_block_rows(jnp.zeros((10, 6)), spec.cc)

@@ -1,0 +1,58 @@
+"""Pallas flash-attention kernel vs dense oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _ref(q, k, v, scale, causal, window, softcap):
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(q.shape[1])
+    kp = jnp.arange(k.shape[1])
+    m = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        m &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(m[None], s, -1e30)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1),
+                      v.astype(jnp.float32))
+
+
+CASES = [(True, None, None), (True, 384, None), (True, None, 50.0),
+         (False, None, None), (True, 100, 30.0)]
+
+
+@pytest.mark.parametrize("causal,window,softcap", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("blocks", [(128, 128), (256, 128)])
+def test_flash_kernel_matches_dense(rs, causal, window, softcap, dtype,
+                                    blocks):
+    bq, bk = blocks
+    BH, S, D = 2, 512, 64
+    q = jnp.asarray(rs.standard_normal((BH, S, D)), dtype)
+    k = jnp.asarray(rs.standard_normal((BH, S, D)), dtype)
+    v = jnp.asarray(rs.standard_normal((BH, S, D)), dtype)
+    o = flash_attention_pallas(q, k, v, scale=D ** -0.5, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk,
+                               interpret=True)
+    r = _ref(q, k, v, D ** -0.5, causal, window, softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(r),
+                               rtol=tol, atol=tol)
+
+
+def test_rectangular_kv(rs):
+    q = jnp.asarray(rs.standard_normal((2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((2, 512, 64)), jnp.float32)
+    o = flash_attention_pallas(q, k, v, scale=0.125, causal=False,
+                               bq=128, bk=128, interpret=True)
+    r = _ref(q, k, v, 0.125, False, None, None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,61 @@
+"""FT runtime: injector plans, recovery path selection, disk fallback."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.disk import CheckpointManager
+from repro.ft.failures import FailureInjector, FailurePlan
+from repro.ft.runtime import FTPolicy, FTRuntime
+
+
+def _state(rs, p=4):
+    return {"w": jnp.asarray(rs.standard_normal((p, 4, 4)), jnp.float32)}
+
+
+def test_plan_fires_once():
+    inj = FailureInjector(FailurePlan(events=((3, 1), (7, 2))))
+    assert inj.check(0) is None
+    assert inj.check(3) == 1
+    assert inj.check(3) is None  # fires once
+    assert inj.check(7) == 2
+
+
+def test_random_plan_within_bounds():
+    plan = FailurePlan.random(10, max_step=50, p=4, seed=3)
+    assert len(plan.events) == 10
+    assert all(1 <= s < 50 and 0 <= i < 4 for s, i in plan.events)
+
+
+def test_runtime_diskless_path(rs):
+    p = 4
+    rt = FTRuntime(p, FTPolicy(diskless_every=1, f=1))
+    state = _state(rs, p)
+    rt.maybe_checkpoint(0, state)
+    damaged = FailureInjector.damage(state, 3, p)
+    rec = rt.recover(damaged, [3])
+    np.testing.assert_allclose(np.asarray(rec["w"]), np.asarray(state["w"]),
+                               rtol=1e-5, atol=1e-5)
+    assert rt.recoveries["diskless"] == 1
+
+
+def test_runtime_disk_fallback(rs, tmp_path):
+    """Failures beyond f fall back to the disk checkpoint."""
+    p = 4
+    mgr = CheckpointManager(tmp_path)
+    rt = FTRuntime(p, FTPolicy(diskless_every=1, disk_every=1, f=1),
+                   ckpt_manager=mgr)
+    state = _state(rs, p)
+    rt.maybe_checkpoint(0, state)
+    mgr.wait()
+    damaged = FailureInjector.damage(state, 0, p)
+    damaged = FailureInjector.damage(damaged, 1, p)
+    rec = rt.recover(damaged, [0, 1])   # 2 failures > f=1 -> disk
+    np.testing.assert_allclose(np.asarray(rec["w"]), np.asarray(state["w"]),
+                               rtol=1e-6, atol=1e-6)
+    assert rt.recoveries["disk"] == 1
+
+
+def test_unrecoverable_raises(rs):
+    rt = FTRuntime(4, FTPolicy(f=1))
+    with pytest.raises(RuntimeError):
+        rt.recover(_state(rs), [0, 1])

@@ -1,0 +1,75 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.checksum import checkpoint_matrix
+from repro.kernels import ops, ref
+from repro.kernels.abft_matmul import abft_matmul_pallas
+from repro.kernels.checksum_encode import checksum_encode_pallas
+
+MATMUL_CASES = [
+    # (m, k, n, bm, bn, bk)
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 256, 128, 128, 256),
+    (256, 256, 384, 128, 128, 128),
+    (512, 1024, 512, 256, 256, 512),
+    (384, 128, 640, 128, 128, 128),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", MATMUL_CASES)
+def test_abft_matmul_kernel(rs, m, k, n, bm, bn, bk, dtype):
+    a = jnp.asarray(rs.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rs.standard_normal((k, n)), dtype)
+    c, cs = abft_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    c_ref, cs_ref = ref.abft_matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(c, np.float32),
+                               np.asarray(c_ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+    # checksum accumulates in fp32 in both paths
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(cs_ref),
+                               rtol=1e-3, atol=k * 1e-4)
+
+
+def test_kernel_checksum_is_true_colsum(rs):
+    """The fused checksum equals the column sums of the kernel's own C."""
+    a = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    c, cs = abft_matmul_pallas(a, b, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(cs),
+                               np.asarray(jnp.sum(c, axis=0)),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("p,f,m,n", [(4, 1, 128, 128), (8, 2, 256, 128),
+                                     (16, 3, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_checksum_encode_kernel(rs, p, f, m, n, dtype):
+    x = jnp.asarray(rs.standard_normal((p, m, n)), dtype)
+    a = checkpoint_matrix(f, p)
+    y = checksum_encode_pallas(x, a, bm=128, bn=128, interpret=True)
+    y_ref = ref.checksum_encode_ref(x, a)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_ops_fallback_matches_kernel(rs):
+    a = jnp.asarray(rs.standard_normal((256, 512)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((512, 256)), jnp.float32)
+    c1, cs1 = ops.abft_matmul(a, b, force_pallas=True)
+    c2, cs2 = ops.abft_matmul(a, b, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cs1), np.asarray(cs2),
+                               rtol=1e-3, atol=1e-1)
+
+
+def test_block_picker():
+    assert ops.pick_blocks(512, 1024, 512) is not None
+    assert ops.pick_blocks(100, 100, 100) is None  # unaligned -> fallback

@@ -1,0 +1,72 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_configs, smoke_config, valid_cells
+from repro.models import transformer as tf
+
+ARCHS = list_configs()
+
+
+def _inputs(cfg, key, B=2, S=16):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    dt = jnp.float32
+    if cfg.n_enc_layers:
+        kw["frames"] = jax.random.normal(key, (B, cfg.n_frames, cfg.d_model), dt)
+    if cfg.n_img_tokens:
+        kw["img_emb"] = jax.random.normal(key, (B, cfg.n_img_tokens, cfg.d_model), dt)
+    return tokens, labels, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg)
+    tokens, labels, kw = _inputs(cfg, key)
+    logits, _, aux = tf.forward(params, tokens, cfg, **kw)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_decreases_loss_direction(arch):
+    """One SGD step along the gradient must not produce NaN and the loss/
+    grads must be finite (full train-step integration per arch)."""
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = tf.init_params(key, cfg)
+    tokens, labels, kw = _inputs(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.loss_fn(p, tokens, labels, cfg, **kw))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # apply a tiny step; loss must remain finite and (almost always) drop
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = tf.loss_fn(params2, tokens, labels, cfg, **kw)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) < float(loss) + 0.05
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates_shapes_only(arch):
+    """The FULL config is exercised via eval_shape (no allocation)."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(shapes))
+    assert n > 1e8, f"{arch}: implausibly small full config ({n})"
+
+
+def test_long_context_skips_documented():
+    """Pure full-attention archs skip long_500k; SSM/hybrid/local run it."""
+    runs_long = {a for a in ARCHS if "long_500k" in valid_cells(a)}
+    assert runs_long == {"gemma2-2b", "gemma3-4b", "jamba-1.5-large-398b",
+                         "xlstm-350m"}

@@ -1,0 +1,79 @@
+"""The paper's alpha-beta-gamma model must reproduce its own Table 1/2.
+
+Paper values are the parenthesized (model) columns of Table 1 on
+jacquard.nersc.gov: gamma = 1/3.75 GFLOP/s, beta = 8 B / 52.5 MB/s.
+"""
+import pytest
+
+from repro.core.model_perf import (JACQUARD, abft_failure_overhead,
+                                   abft_pdgemm_time, gflops_per_proc,
+                                   pdgemm_time, weak_scaling_table)
+
+PAPER_TABLE1_MODEL = {
+    # p: (pblas, abft0, abft1) GFLOPS/s/proc, parenthesized values
+    64: (3.09, 2.49, 2.40),
+    81: (3.09, 2.55, 2.46),
+    100: (3.10, 2.60, 2.52),
+    121: (3.10, 2.65, 2.53),
+    256: (3.12, 2.79, 2.63),
+    484: (3.13, 2.88, 2.74),
+}
+PAPER_TABLE2_OVERHEAD = {64: 129.2, 121: 118.3, 484: 109.4}
+
+
+def test_reproduces_table1_model_values():
+    rows = weak_scaling_table(3000, [8, 9, 10, 11, 16, 22])
+    for p, pblas, abft0, abft1 in rows:
+        ref = PAPER_TABLE1_MODEL[p]
+        assert abs(pblas / ref[0] - 1) < 0.035, (p, pblas, ref[0])
+        assert abs(abft0 / ref[1] - 1) < 0.05, (p, abft0, ref[1])
+        assert abs(abft1 / ref[2] - 1) < 0.06, (p, abft1, ref[2])
+
+
+def test_reproduces_table2_overhead_trend():
+    """Overhead must decline with p and be within a few % of Table 2."""
+    rows = {p: (pb, a0) for p, pb, a0, _ in weak_scaling_table(
+        3000, [8, 11, 22])}
+    overheads = {p: 100 * pb / a0 for p, (pb, a0) in rows.items()}
+    for p, ref in PAPER_TABLE2_OVERHEAD.items():
+        assert abs(overheads[p] - ref) < 4.0, (p, overheads[p], ref)
+    assert overheads[64] > overheads[121] > overheads[484]
+
+
+def test_headline_claim_1_4_tflops_484_procs():
+    """Abstract: 1.4 TFLOPS on 484 procs with one failure, <12% overhead."""
+    t0 = abft_pdgemm_time(3000, 484, JACQUARD)
+    t1 = t0 + abft_failure_overhead(3000, 484, JACQUARD)
+    n_data = 21 * 3000
+    total_tflops = gflops_per_proc(n_data, 484, t1) * 484 / 1000
+    assert 1.25 < total_tflops < 1.45  # paper: 1.321-1.4 TFLOPS
+    t_pblas = pdgemm_time(22 * 3000, 484, JACQUARD)
+    overhead0 = gflops_per_proc(22 * 3000, 484, t_pblas) / \
+        gflops_per_proc(n_data, 484, abft_pdgemm_time(3000, 484, JACQUARD))
+    assert overhead0 - 1 < 0.12  # <12% with respect to failure-free PBLAS
+
+
+def test_abft_efficiency_increases_with_p():
+    """The paper's key scalability claim: ABFT overhead -> 0 as p grows."""
+    rows = weak_scaling_table(3000, [8, 12, 16, 20, 22])
+    eff = [a0 / pb for _, pb, a0, _ in rows]
+    assert all(b > a for a, b in zip(eff, eff[1:]))
+
+
+def test_strong_scaling_overhead_governed_by_p_not_n():
+    """Fig 7 right: overhead depends on processor count, not problem size."""
+    for q in (8, 16):
+        p = q * q
+        ov = []
+        for nloc in (1000, 2000, 4000):
+            n = q * nloc
+            t_p = pdgemm_time(n, p, JACQUARD)
+            t_a = abft_pdgemm_time(nloc, p, JACQUARD)
+            ov.append(gflops_per_proc(n, p, t_p)
+                      / gflops_per_proc((q - 1) * nloc, p, t_a))
+        # overhead varies little with n at fixed p...
+        assert max(ov) - min(ov) < 0.04
+    # ...but drops markedly with p at fixed memory/node
+    t8 = weak_scaling_table(3000, [8])[0]
+    t22 = weak_scaling_table(3000, [22])[0]
+    assert (t8[1] / t8[2]) > (t22[1] / t22[2]) + 0.1

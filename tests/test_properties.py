@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import checksum as cs
+from repro.core import detect, encoding as enc
+
+jax.config.update("jax_platform_name", "cpu")
+
+small_dims = st.integers(min_value=1, max_value=6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=st.integers(1, 3), p=st.integers(4, 10),
+       m=small_dims, n=small_dims, seed=st.integers(0, 2**16))
+def test_recover_inverts_any_failure_set(f, p, m, n, seed):
+    """For any f-subset of shards, recover(encode) is the identity."""
+    rng = np.random.RandomState(seed)
+    a = cs.checkpoint_matrix(f, p, seed=seed % 7)
+    x = jnp.asarray(rng.standard_normal((p, m, n)), jnp.float32)
+    y = cs.encode(x, a)
+    failed = sorted(rng.choice(p, size=min(f, p - 1), replace=False).tolist())
+    xf = x.at[jnp.asarray(failed)].set(jnp.nan)
+    xr = cs.recover(xf, y, a, failed)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(pr=st.integers(2, 4), pc=st.integers(2, 4), f=st.integers(1, 2),
+       mb=st.integers(2, 6), nb=st.integers(2, 6), k=st.integers(3, 12),
+       seed=st.integers(0, 2**16))
+def test_eq1_product_consistency(pr, pc, f, mb, nb, k, seed):
+    """Eq. (1): rowenc(A) @ colenc(B) == fullenc(A@B) for random shapes."""
+    rng = np.random.RandomState(seed)
+    spec = enc.make_spec(f, pr, pc, seed=seed % 5)
+    A = jnp.asarray(rng.standard_normal((pr * mb, k)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((k, pc * nb)), jnp.float32)
+    lhs = enc.encode_block_rows(A, spec.cc) @ enc.encode_block_cols(B, spec.cr)
+    rhs = enc.encode_full(A @ B, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-3, atol=2e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       r=st.integers(0, 11), c=st.integers(0, 11),
+       logdelta=st.floats(1.0, 5.0))
+def test_flip_always_located(seed, r, c, logdelta):
+    """Any single data-element flip >> roundoff is located exactly."""
+    rng = np.random.RandomState(seed)
+    spec = enc.make_spec(1, 3, 3, seed=seed % 5)
+    x = jnp.asarray(rng.standard_normal((12, 12)), jnp.float32)
+    xf = enc.encode_full(x, spec)
+    bad = xf.at[r, c].add(10.0 ** logdelta)
+    fixed, was_corrupt, (rr, cc) = detect.locate_and_correct(bad, spec)
+    assert bool(was_corrupt)
+    assert (int(rr), int(cc)) == (r, c)
+    np.testing.assert_allclose(np.asarray(enc.strip(fixed, 4, 4)),
+                               np.asarray(x), rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_no_false_positives_on_clean_data(seed):
+    """verify() never flags an uncorrupted encoded matrix."""
+    rng = np.random.RandomState(seed)
+    spec = enc.make_spec(1, 3, 3, seed=seed % 3)
+    x = jnp.asarray(rng.standard_normal((12, 12)) * 10 ** rng.randint(-2, 3),
+                    jnp.float32)
+    xf = enc.encode_full(x, spec)
+    assert bool(detect.verify(xf, spec).consistent)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), scale_a=st.floats(-3.0, 3.0),
+       scale_b=st.floats(-3.0, 3.0))
+def test_encoding_linearity_property(seed, scale_a, scale_b):
+    rng = np.random.RandomState(seed)
+    spec = enc.make_spec(2, 2, 2, seed=1)
+    x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    lhs = enc.encode_full(scale_a * x + scale_b * y, spec)
+    rhs = scale_a * enc.encode_full(x, spec) + scale_b * enc.encode_full(y, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-3)
