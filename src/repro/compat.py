@@ -1,0 +1,69 @@
+"""JAX version-compatibility shims (installed on `import repro`).
+
+The codebase is written against the current jax surface — `jax.set_mesh`
+as the ambient-mesh context manager and `jax.shard_map` with the
+`check_vma` / `axis_names` keywords.  On older jax (< 0.5) those either
+live elsewhere (`jax.experimental.shard_map`) or do not exist; this module
+installs equivalents at import time so one source tree runs on both.
+
+Every shim is guarded with `hasattr`: on a new-enough jax this module is a
+no-op, and nothing here ever *overrides* a real jax API.
+
+Known trade-off: installing onto the jax namespace means third-party code
+feature-detecting `hasattr(jax, "set_mesh")` in this process sees the shim,
+whose ambient-mesh fallback is lexical-only on jax builds without
+`jax.sharding.use_mesh` (all shardings in THIS codebase are explicit
+NamedShardings, so that is sufficient here).  The alternative — rewriting
+every call site plus the tier-1 test scripts to import repro-scoped
+wrappers — was rejected: the scripts are deliberately written against the
+target jax surface and should run unchanged after the toolchain uprev
+(ROADMAP "jax uprev"), at which point these shims self-disable.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if not hasattr(jax, "set_mesh"):
+    _use_mesh = getattr(jax.sharding, "use_mesh", None)
+
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        if _use_mesh is not None:
+            with _use_mesh(mesh):
+                yield mesh
+        else:
+            # Every sharding in this codebase is an explicit NamedSharding
+            # (in_shardings / out_shardings / with_sharding_constraint all
+            # carry their mesh), so on jax versions without an ambient-mesh
+            # concept the context is purely lexical.
+            yield mesh
+
+    jax.set_mesh = _set_mesh
+
+
+if not hasattr(jax.lax, "pvary"):
+    # pvary only annotates varying-over-axes for the newer VMA checker;
+    # on jax versions without that type system it is the identity.
+    jax.lax.pvary = lambda x, axes: x
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                   axis_names=None):
+        """New-style jax.shard_map on top of jax.experimental.shard_map.
+
+        `axis_names` (the manual axes) maps onto the old `auto` keyword
+        (its complement); `check_vma` is the renamed `check_rep`.
+        """
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=check_vma,
+                               auto=auto)
+
+    jax.shard_map = _shard_map

@@ -117,8 +117,14 @@ def correct_output(y, y_cs, residual, cfg: ABFTConfig):
     ratio = flat_res[r, 1] / (flat_res[r, 0] + 1e-30)
     col = jnp.argmin(jnp.abs(wr[:, 1] / wr[:, 0] - ratio))
     delta = flat_res[r, 0] / wr[col, 0]
-    corrupt = jnp.max(jnp.abs(flat_res[:, 0])) > 0  # gated by caller's ok flag
     fixed = flat_y.at[r, col].add(-delta)
+    # one iterative-refinement pass: the first residual was computed with
+    # the (huge) corrupted value in the sum, so it carries |delta|*eps of
+    # cancellation error; re-deriving it from the repaired row leaves only
+    # O(n eps |y|) error on the corrected element
+    flat_cs = y_cs.reshape(-1, cfg.f).astype(jnp.float32)
+    res_r = fixed[r] @ wr - flat_cs[r]
+    fixed = fixed.at[r, col].add(-res_r[0] / wr[col, 0])
     eps = float(jnp.finfo(jnp.float32).eps)
     scale = jnp.max(jnp.abs(y32)) + 1e-30
     tol = cfg.tol_factor * n * eps * scale

@@ -94,6 +94,36 @@ def encode_operands(a: jax.Array, b: jax.Array, spec: EncodingSpec):
     return a_enc, b_enc
 
 
+def _solve_static(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve a @ x = b for a tiny static-k system in pure jnp.
+
+    Runs inside shard_map, where jnp.linalg.solve's custom-call lowering is
+    unavailable on older jax.  k is the number of simultaneously failed
+    lines (<= f, i.e. 1-2 in practice); closed forms for k<=2, unrolled
+    Gauss-Jordan with partial pivoting beyond.
+    """
+    k = a.shape[0]
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if k == 1:
+        return b / a[0, 0]
+    if k == 2:
+        det = a[0, 0] * a[1, 1] - a[0, 1] * a[1, 0]
+        return jnp.stack([(a[1, 1] * b[0] - a[0, 1] * b[1]) / det,
+                          (a[0, 0] * b[1] - a[1, 0] * b[0]) / det])
+    aug = jnp.concatenate([a, b], axis=1)
+    for col in range(k):
+        piv = jnp.argmax(jnp.abs(aug[col:, col])) + col
+        swap = jnp.stack([aug[piv], aug[col]])
+        aug = aug.at[jnp.asarray([col, piv])].set(swap)
+        aug = aug / jnp.where(jnp.arange(k) == col,
+                              aug[col, col], 1.0)[:, None]
+        elim = aug - jnp.where(jnp.arange(k) == col, 0.0,
+                               aug[:, col])[:, None] * aug[col][None]
+        aug = elim
+    return aug[:, k:]
+
+
 def _local_summa(
     a_blk, b_blk, *,
     grid: int,
@@ -237,7 +267,7 @@ def _recover_line(
         assert len(avail) == k, "not enough surviving checksums in line"
         sel = jnp.asarray(avail)
         sub = w32[sel][:, jnp.asarray(failed_data)]             # [k, k]
-        sol = jnp.linalg.solve(
+        sol = _solve_static(
             sub, rhs[sel].reshape(k, -1)).reshape((k,) + x_blk.shape)
         restored = jnp.zeros_like(x32)
         for i, l in enumerate(failed_data):

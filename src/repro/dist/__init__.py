@@ -1,0 +1,9 @@
+"""Distribution layer: sharding-rule inference and fault-tolerant collectives.
+
+`dist.sharding` turns a mesh + pytrees of shapes into PartitionSpecs with
+*name-based* rules (mesh-shape-agnostic — required by ckpt.elastic's
+reshard-restore).  `dist.collectives` provides the reductions that carry the
+paper's checksums along the wire: an int8 error-feedback compressed tree
+all-reduce and a Huang-Abraham checksum-verified psum.
+"""
+from repro.dist import collectives, sharding  # noqa: F401

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FailurePlan", "FailureInjector"]
+__all__ = ["FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
+           "flip_bit"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,3 +59,70 @@ class FailureInjector:
                     if jnp.issubdtype(x.dtype, jnp.floating) else x
             return x
         return jax.tree.map(hit, state)
+
+
+# ---------------------------------------------------------------------------
+# Silent data corruption (SDC): the paper's bit-flip fault model.  Unlike a
+# shard loss (erasure), an SDC leaves no platform signal — only the ABFT
+# checksums (core.abft_gemm in the matmuls, dist.collectives.abft_psum in
+# the gradient reduction) can see it.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SDCPlan:
+    """Deterministic SDC schedule: at step s, shard i's contribution to the
+    gradient reduction is corrupted by `delta` (a flipped high mantissa /
+    exponent bit shows up as a large additive error)."""
+    events: Tuple[Tuple[int, int, float], ...]   # (step, dp_shard, delta)
+
+    def __post_init__(self):
+        steps = [s for (s, _, _) in self.events]
+        if len(steps) != len(set(steps)):
+            raise ValueError(
+                "SDCPlan allows one event per step (the injector fires "
+                f"once per step): duplicate steps in {steps}")
+
+    @classmethod
+    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0,
+               magnitude: float = 1e3):
+        """At most one event per step (SDCInjector fires once per step, so
+        same-step collisions would silently never execute)."""
+        rng = np.random.RandomState(seed)
+        n_events = min(n_events, max_step - 1)
+        steps = rng.choice(np.arange(1, max_step), size=n_events,
+                           replace=False)
+        ev = tuple(sorted(
+            (int(s), int(rng.randint(0, p)),
+             float(magnitude * rng.choice([-1.0, 1.0])))
+            for s in steps))
+        return cls(ev)
+
+
+class SDCInjector:
+    def __init__(self, plan: SDCPlan):
+        self.plan = plan
+        self._fired: List[Tuple[int, int]] = []
+
+    def check(self, step: int) -> Optional[Tuple[int, float]]:
+        """Returns (shard, delta) if an SDC event fires at `step`."""
+        for (s, i, d) in self.plan.events:
+            if s == step and (s, i) not in self._fired:
+                self._fired.append((s, i))
+                return i, d
+        return None
+
+
+def flip_bit(x, flat_index: int, bit: int = 30):
+    """XOR one bit of a float32 array element — the literal fault model.
+
+    Used by drills to produce realistic corruption magnitudes; `bit` 30 is
+    the top exponent bit (catastrophic), ~23-29 exponent, <23 mantissa.
+    """
+    x = jnp.asarray(x)
+    assert x.dtype == jnp.float32, "bit-flip model is defined on float32"
+    flat = x.reshape(-1)
+    word = jax.lax.bitcast_convert_type(flat[flat_index], jnp.uint32)
+    word = word ^ jnp.uint32(1 << bit)
+    return flat.at[flat_index].set(
+        jax.lax.bitcast_convert_type(word, jnp.float32)).reshape(x.shape)

@@ -24,7 +24,7 @@ from typing import Callable, Optional
 import jax
 
 from repro.ckpt.diskless import DisklessCheckpoint
-from repro.ft.failures import FailureInjector
+from repro.ft.failures import FailureInjector, SDCInjector
 
 __all__ = ["FTPolicy", "FTRuntime"]
 
@@ -43,13 +43,15 @@ class FTRuntime:
 
     def __init__(self, p: int, policy: FTPolicy,
                  injector: Optional[FailureInjector] = None,
-                 ckpt_manager=None):
+                 ckpt_manager=None,
+                 sdc_injector: Optional[SDCInjector] = None):
         self.p = p
         self.policy = policy
         self.injector = injector
+        self.sdc_injector = sdc_injector
         self.ckpt = ckpt_manager
         self.diskless = DisklessCheckpoint(p, policy.f)
-        self.recoveries = {"diskless": 0, "disk": 0}
+        self.recoveries = {"diskless": 0, "disk": 0, "sdc": 0}
         self.step_times = []
 
     def maybe_checkpoint(self, step: int, state, aux=None):
@@ -58,14 +60,37 @@ class FTRuntime:
         if self.ckpt is not None and step % self.policy.disk_every == 0:
             self.ckpt.save(step, state, aux=aux)
 
-    def step(self, step_idx: int, state, run_step: Callable):
-        """Run one training step with failure check + recovery."""
+    def step(self, step_idx: int, state, run_step: Callable,
+             run_step_sdc: Optional[Callable] = None):
+        """Run one training step with failure check + recovery.
+
+        `run_step_sdc(state, (shard, delta))` runs a step variant with an
+        SDC injection + `abft_reduce` protection (train.step.StepOptions):
+        when the SDC plan fires at this step the corrupted variant runs and
+        the ABFT checksum riding the gradient psum repairs the reduction
+        in-flight (counted under recoveries["sdc"]).  The fired event is
+        passed through so the drill can select/parameterize the injected
+        step (injection location is compile-time static in StepOptions, so
+        a drill pre-builds one step per planned (shard, delta)).
+        """
         t0 = time.time()
         failed = self.injector.check(step_idx) if self.injector else None
         if failed is not None:
             state = FailureInjector.damage(state, failed, self.p)
             state = self.recover(state, [failed])
-        out = run_step(state)
+        # only consume an SDC event when there is a handler to drive it —
+        # otherwise the event stays planned instead of silently vanishing
+        sdc = (self.sdc_injector.check(step_idx)
+               if self.sdc_injector is not None and run_step_sdc is not None
+               else None)
+        if sdc is not None:
+            # counts SDC drills DRIVEN (injection reached the reduction);
+            # whether it was merely detected or also repaired is the step's
+            # abft_reduce mode, visible in metrics["abft_ok"]
+            self.recoveries["sdc"] += 1
+            out = run_step_sdc(state, sdc)
+        else:
+            out = run_step(state)
         self.step_times.append(time.time() - t0)
         return out
 

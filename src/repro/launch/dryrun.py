@@ -113,6 +113,8 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, opts=None, verbose=True,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):    # older jax: one dict per partition
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         # trip-count-aware accounting (XLA cost_analysis counts loop bodies

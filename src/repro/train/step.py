@@ -40,7 +40,13 @@ class StepOptions:
     aux_weight: float = 0.01
     # defer the DP gradient all-reduce to AFTER microbatch accumulation
     # (shard_map manual-DP region: one psum instead of one per microbatch —
-    # cuts grad collective bytes by the microbatch count)
+    # cuts grad collective bytes by the microbatch count).
+    # NOTE pinned-toolchain limit: on jax 0.4.37 the XLA SPMD partitioner
+    # aborts (Check failed: IsManualSubgroup) on lax.scan-over-stacked-
+    # params inside a PARTIAL-manual region, so the defer family (defer /
+    # zero2 / int8_ef / abft_reduce) lowers multi-device only on the newer
+    # toolchain this codebase targets; single-device SPMD and the vmap
+    # collective semantics are exercised by tests either way.
     defer_grad_reduce: bool = False
     # ZeRO-2: reduce-SCATTER the deferred gradients over DP (each device
     # holds 1/ndp of the fp32 grads, matching the ZeRO-1 opt-state shards;
@@ -55,6 +61,15 @@ class StepOptions:
     # reduce-scatters grads — ZeRO-3 semantics via sharding rules alone.
     # Required to FIT kimi-1T / jamba-398B on the 256-chip mesh.
     fsdp: bool = False
+    # checksum-protect the DP gradient all-reduce itself (Huang-Abraham row
+    # rides the same psum — dist.collectives.abft_psum).  "verify" detects a
+    # corrupted reduction (metrics["abft_ok"]), "correct" repairs a single
+    # corrupted element.  Takes effect on the defer_grad_reduce path.
+    abft_reduce: str = "off"       # off | verify | correct
+    # FT drill hook: (dp_shard, delta) corrupts one gradient element of that
+    # shard's contribution DURING the reduction (after its checksum is
+    # taken) — lets ft.runtime exercise detection/correction end-to-end.
+    sdc_inject: Optional[Tuple[int, float]] = None
 
     @property
     def remat_arg(self):
@@ -187,6 +202,16 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                      adamw: AdamWConfig = AdamWConfig(),
                      opts: StepOptions = StepOptions()):
     """Returns (step_fn, in_shardings, donate_argnums)."""
+    if opts.abft_reduce != "off" and (
+            not opts.defer_grad_reduce or opts.zero2
+            or opts.grad_compression != "none"):
+        raise ValueError(
+            "abft_reduce protects the deferred DP all-reduce: it requires "
+            "defer_grad_reduce=True and is incompatible with zero2 / "
+            f"grad_compression (got {opts})")
+    if opts.sdc_inject is not None and opts.abft_reduce == "off":
+        raise ValueError("sdc_inject corrupts the protected reduction — "
+                         "set abft_reduce to 'verify' or 'correct'")
     cfg = _moe_cfg(cfg, mesh)
     m = opts.microbatches
     assert shape.global_batch % max(m, 1) == 0
@@ -311,6 +336,24 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                 in_specs=(params_specs, ispecs_local),
                 out_specs=(P(), gspecs),
                 check_vma=False, axis_names=frozenset(dp))
+        elif opts.abft_reduce != "off":
+            from repro.dist.collectives import abft_psum_tree
+
+            def grads_local(params, batch):
+                loss, grads = _accumulate(local_loss, params, batch)
+                loss = jax.lax.pmean(loss, dp)
+                # ONE checksum-protected reduction (the paper's technique
+                # applied to the grad collective, not just the matmuls)
+                grads, ok = abft_psum_tree(
+                    grads, dp, ndp, mode=opts.abft_reduce,
+                    inject=opts.sdc_inject)
+                return loss, grads, ok.astype(jnp.float32)
+
+            grad_fn = jax.shard_map(
+                grads_local, mesh=mesh,
+                in_specs=(params_specs, ispecs_local),
+                out_specs=(P(), params_specs, P()),
+                check_vma=False, axis_names=frozenset(dp))
         else:
             def grads_local(params, batch):
                 loss, grads = _accumulate(local_loss, params, batch)
@@ -326,12 +369,18 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                 check_vma=False, axis_names=frozenset(dp))
     else:
         grad_fn = functools.partial(_accumulate, loss_of)
+    # the option validation above already rejects abft_reduce combined with
+    # zero2 / compression / non-deferred reduction
+    abft_reduce_on = opts.abft_reduce != "off"
 
     def step_fn(state, batch):
         params = state["params"]
         new_res = None
+        reduce_ok = None
         if "ef_residual" in state:
             loss, grads, new_res = grad_fn(params, batch, state["ef_residual"])
+        elif abft_reduce_on:
+            loss, grads, reduce_ok = grad_fn(params, batch)
         else:
             loss, grads = grad_fn(params, batch)
         new_params, new_opt, metrics = adamw_update(
@@ -341,6 +390,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         if new_res is not None:
             new_state["ef_residual"] = new_res
         metrics = dict(metrics, loss=loss)
+        if reduce_ok is not None:
+            metrics["abft_ok"] = reduce_ok
         return new_state, metrics
 
     state_shapes = jax.eval_shape(
@@ -355,6 +406,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     metric_sh = {"grad_norm": NamedSharding(mesh, P()),
                  "lr": NamedSharding(mesh, P()),
                  "loss": NamedSharding(mesh, P())}
+    if abft_reduce_on:
+        metric_sh["abft_ok"] = NamedSharding(mesh, P())
     out_shardings = (state_sh, metric_sh)
     return step_fn, in_shardings, out_shardings
 

@@ -1,0 +1,226 @@
+"""dist.collectives: int8 error-feedback all-reduce and the Huang-Abraham
+checksum-verified psum (single-bit-flip detect/correct through the wire).
+
+Collectives are exercised with jax.vmap(axis_name=...) — identical manual-
+collective semantics to shard_map, one CPU device (the conftest invariant).
+The sharded end-to-end path runs in test_distributed's subprocesses.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.collectives import abft_psum, abft_psum_tree, ef_psum_tree
+from repro.ft.failures import SDCInjector, SDCPlan, flip_bit
+
+NDP = 4
+
+
+def _per_shard_tree(rs, ndp=NDP):
+    return {
+        "w": jnp.asarray(rs.standard_normal((ndp, 8, 16)), jnp.float32),
+        "b": jnp.asarray(rs.standard_normal((ndp, 32)), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# ef_psum_tree
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["psum", "int8"])
+def test_ef_psum_matches_pmean_within_int8_tolerance(rs, wire):
+    grads = _per_shard_tree(rs)
+    res = jax.tree.map(jnp.zeros_like, grads)
+
+    def body(g, r):
+        return ef_psum_tree(g, r, ("dp",), NDP, wire=wire)
+
+    out, new_res = jax.vmap(body, axis_name="dp")(grads, res)
+    for k in grads:
+        ref = np.mean(np.asarray(grads[k]), axis=0)
+        got = np.asarray(out[k][0])
+        # every shard agrees on the reduced value
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.broadcast_to(got, out[k].shape))
+        # int8 quantization: |err| <= sum of per-shard scale/2, i.e. ~1% here
+        scale = np.abs(np.asarray(grads[k])).max(
+            axis=tuple(range(1, grads[k].ndim))).mean() / 127.0
+        assert np.max(np.abs(got - ref)) <= scale, k
+
+
+@pytest.mark.parametrize("wire", ["psum", "int8"])
+def test_ef_residual_feedback_converges(rs, wire):
+    """Repeatedly reducing the SAME grads: the running mean of EF outputs
+    must converge to the exact mean (the residual re-injects what int8
+    dropped), beating the one-shot quantization error."""
+    grads = _per_shard_tree(rs)
+    res = jax.tree.map(jnp.zeros_like, grads)
+    body = jax.vmap(lambda g, r: ef_psum_tree(g, r, ("dp",), NDP, wire=wire),
+                    axis_name="dp")
+    ref = np.mean(np.asarray(grads["w"]), axis=0)
+    outs = []
+    first_err = None
+    for t in range(20):
+        out, res = body(grads, res)
+        outs.append(np.asarray(out["w"][0]))
+        if first_err is None:
+            first_err = np.max(np.abs(outs[0] - ref))
+    running = np.mean(outs, axis=0)
+    assert np.max(np.abs(running - ref)) < 0.25 * first_err
+    # residuals stay bounded (no drift)
+    assert float(jnp.max(jnp.abs(res["w"]))) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# abft_psum
+# ---------------------------------------------------------------------------
+
+
+def _vpsum(x, **kw):
+    return jax.vmap(lambda v: abft_psum(v, ("dp",), **kw), axis_name="dp")(x)
+
+
+def test_abft_psum_clean_matches_psum(rs):
+    x = jnp.asarray(rs.standard_normal((NDP, 6, 7)), jnp.float32)
+    y, ok = _vpsum(x, mode="verify")
+    assert bool(ok.all())
+    np.testing.assert_allclose(np.asarray(y[0]),
+                               np.asarray(x).sum(0), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shard", [0, 2, NDP - 1])
+def test_abft_psum_detects_injected_fault(rs, shard):
+    x = jnp.asarray(rs.standard_normal((NDP, 6, 7)), jnp.float32)
+    y, ok = _vpsum(x, mode="verify", inject=(shard, 37.5))
+    assert not bool(ok.any())                      # every shard sees it
+    # and without correction the sum really is wrong
+    assert np.max(np.abs(np.asarray(y[0]) - np.asarray(x).sum(0))) > 1.0
+
+
+def test_abft_psum_corrects_single_bit_flip(rs):
+    """The acceptance-criteria case: one bit-flip-sized corruption injected
+    into one shard's contribution is located and subtracted — the corrected
+    reduction equals the clean psum."""
+    x = jnp.asarray(rs.standard_normal((NDP, 6, 7)), jnp.float32)
+    # delta the size a flipped exponent bit produces on an O(1) value
+    clean = np.asarray(x).sum(0)
+    flipped = flip_bit(jnp.asarray(1.0, jnp.float32)[None], 0, bit=29)
+    delta = float(flipped[0] - 1.0)
+    y, ok = _vpsum(x, mode="correct", inject=(2, delta))
+    assert not bool(ok.any())                      # fault was seen...
+    np.testing.assert_allclose(np.asarray(y[0]), clean,
+                               rtol=1e-4, atol=1e-4)  # ...and repaired
+    # all shards agree on the repaired value
+    np.testing.assert_allclose(np.asarray(y), np.broadcast_to(clean, y.shape),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_abft_psum_tree_means_and_flags(rs):
+    g = _per_shard_tree(rs)
+    body = jax.vmap(functools.partial(
+        abft_psum_tree, dp_axes=("dp",), ndp=NDP, mode="correct",
+        inject=(1, 100.0)), axis_name="dp")
+    out, ok = body(g)
+    assert not bool(ok.any())
+    for k in g:
+        np.testing.assert_allclose(np.asarray(out[k][0]),
+                                   np.mean(np.asarray(g[k]), axis=0),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the opt-in train-step path + ft.runtime SDC drill
+# ---------------------------------------------------------------------------
+
+
+def _train_pair():
+    from repro.configs.base import ShapeConfig, smoke_config
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import StepOptions, build_train_step, init_state
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = smoke_config("qwen2-0.5b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    dc = DataConfig(cfg.vocab_size, 32, 4)
+
+    def build(**kw):
+        opts = StepOptions(remat=False, defer_grad_reduce=True, **kw)
+        with jax.set_mesh(mesh):
+            fn, in_sh, out_sh = build_train_step(
+                cfg, mesh, shape, AdamWConfig(lr=1e-3, total_steps=10), opts)
+            jit_fn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            state = jax.device_put(
+                init_state(jax.random.PRNGKey(0), cfg, opts, mesh), in_sh[0])
+            batch = jax.device_put(
+                {k: jnp.asarray(v) for k, v in
+                 synthetic_batch(dc, 0).items()}, in_sh[1])
+        return jit_fn, state, batch
+
+    return build
+
+
+def test_sdc_plan_random_one_event_per_step():
+    plan = SDCPlan.random(8, 10, p=4, seed=3)
+    steps = [s for (s, _, _) in plan.events]
+    assert len(steps) == len(set(steps))
+    assert all(1 <= s < 10 for s in steps)
+
+
+def test_abft_reduce_option_conflicts_raise():
+    from repro.configs.base import ShapeConfig, smoke_config
+    from repro.train.step import StepOptions, build_train_step
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = smoke_config("qwen2-0.5b")
+    shape = ShapeConfig("t", 32, 4, "train")
+    for bad in (StepOptions(abft_reduce="correct"),               # no defer
+                StepOptions(defer_grad_reduce=True, zero2=True,
+                            abft_reduce="correct"),
+                StepOptions(defer_grad_reduce=True,
+                            grad_compression="int8_ef",
+                            abft_reduce="verify"),
+                StepOptions(defer_grad_reduce=True,
+                            sdc_inject=(0, 1e3))):                # no abft
+        with pytest.raises(ValueError):
+            build_train_step(cfg, mesh, shape, opts=bad)
+
+
+@pytest.mark.slow
+def test_train_step_abft_reduce_corrects_sdc():
+    build = _train_pair()
+    clean_fn, state, batch = build(abft_reduce="correct")
+    sdc_fn, _, _ = build(abft_reduce="correct", sdc_inject=(0, 1e3))
+    s_clean, m_clean = clean_fn(state, batch)
+    s_sdc, m_sdc = sdc_fn(state, batch)
+    assert float(m_clean["abft_ok"]) == 1.0
+    assert float(m_sdc["abft_ok"]) == 0.0          # detected ...
+    for a, b in zip(jax.tree.leaves(s_clean["params"]),
+                    jax.tree.leaves(s_sdc["params"])):
+        np.testing.assert_allclose(                 # ... and corrected
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-4)
+
+
+@pytest.mark.slow
+def test_ft_runtime_drives_sdc_through_protected_step():
+    from repro.ft.runtime import FTPolicy, FTRuntime
+
+    build = _train_pair()
+    clean_fn, state, batch = build(abft_reduce="correct")
+    sdc_fn, _, _ = build(abft_reduce="correct", sdc_inject=(0, 1e3))
+    rt = FTRuntime(4, FTPolicy(diskless_every=100),
+                   sdc_injector=SDCInjector(SDCPlan(((1, 0, 1e3),))))
+    oks = []
+    events = []
+    for i in range(3):
+        state, m = rt.step(
+            i, state, lambda s: clean_fn(s, batch),
+            run_step_sdc=lambda s, ev: (events.append(ev), sdc_fn(s, batch))[1])
+        oks.append(float(m["abft_ok"]))
+    assert events == [(0, 1e3)]                    # payload delivered
+    assert rt.recoveries["sdc"] == 1
+    assert oks == [1.0, 0.0, 1.0]                  # fired exactly at step 1
+    assert np.isfinite(float(m["loss"]))

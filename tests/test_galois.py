@@ -1,6 +1,8 @@
 """GF(2^8) Reed-Solomon coding: bit-exact recovery (paper §2.1 GF option)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.galois import GF, cauchy_matrix, gf_encode, gf_recover
