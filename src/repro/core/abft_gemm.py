@@ -21,6 +21,16 @@ The element-granular weight matrix here is ``w_r = checkpoint_matrix(f, n).T``
 appropriate because a TPU shard failure erases a *slab* of Y, which the SUMMA
 path handles; this path targets silent data corruption (bit-flips), where
 element granularity maximizes location precision.
+
+Backend: with ``backend="pallas"`` (or "auto" on TPU) the matmul AND the
+verification residual run in one fused Pallas kernel (`kernels.ops`): the
+kernel's row-checksum epilogue is fed ``W_n = [w_r; -I]`` so it reduces
+``Y @ w_r - Y_cs`` — the §4.3 residual — directly from the VMEM-resident
+accumulator.  That deletes the separate ``Y @ w_r`` verify einsum and its
+full extra HBM read of Y; detection/correction then run on checksum-sized
+data.  ``backend="ref"`` (and "auto" off-TPU) keeps the plain XLA path.
+This is the fused path behind `models.layers.linear_apply` and the serving
+engine's projections.
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ class ABFTConfig:
     f: int = 2                 # number of checksum columns (2 => locate 2D)
     tol_factor: float = 256.0  # residual threshold multiplier
     seed: int = 17
+    backend: str = "auto"      # auto | pallas | ref (fused-kernel dispatch)
 
     @property
     def active(self) -> bool:
@@ -61,6 +72,41 @@ def encode_weight(w: jax.Array, cfg: ABFTConfig) -> jax.Array:
     return jnp.concatenate([w, cs], axis=-1)
 
 
+def _fused_forward(x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig):
+    """Fused-kernel forward: (y_f fp32, residual fp32 [..., f]) or None.
+
+    Dispatches through `kernels.ops.abft_matmul` with the row-checksum
+    weights set to ``[w_r; -I]``, so the kernel epilogue reduces the §4.3
+    verification residual from the VMEM-resident accumulator — no separate
+    verify einsum, no extra HBM read of Y.
+    """
+    from repro.kernels import ops as kops  # lazy: avoids core<->kernels cycle
+
+    force = cfg.backend == "pallas"
+    if not (force or (cfg.backend == "auto" and kops.on_tpu())):
+        return None
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    n_enc = w_enc.shape[-1]
+    n = n_enc - cfg.f
+    plan = kops.pick_blocks(m, k, n_enc, in_bytes=x.dtype.itemsize,
+                            out_bytes=4, f=cfg.f)
+    if plan is None or (not force and plan.waste > 0.25):
+        return None
+    wr = _weights(n, cfg.f, cfg.seed, jnp.float32)             # [n, f]
+    wn_res = jnp.concatenate(
+        [wr, -jnp.eye(cfg.f, dtype=jnp.float32)], axis=0)      # [n+f, f]
+    wm = kops.kernel_weights(m, cfg.f)
+    y_f, _cs_col, res = kops.abft_matmul(
+        x.reshape(m, k), w_enc, wm=wm, wn=wn_res,
+        out_dtype=jnp.float32, force_pallas=force,
+        max_waste=float("inf"), plan=plan)
+    return y_f.reshape(*lead, n_enc), res.reshape(*lead, cfg.f)
+
+
 def abft_matmul(
     x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
@@ -71,15 +117,34 @@ def abft_matmul(
     """
     if not cfg.active:
         return jnp.dot(x, w_enc, preferred_element_type=jnp.float32).astype(x.dtype), None
-    y_f = jnp.dot(x, w_enc, preferred_element_type=jnp.float32)
+    fused = _fused_forward(x, w_enc, cfg)
+    if fused is None:
+        y_f = jnp.dot(x, w_enc, preferred_element_type=jnp.float32)
+        residual = None
+    else:
+        y_f, residual = fused
     y, y_cs = y_f[..., : -cfg.f], y_f[..., -cfg.f :]
     if cfg.mode == "checksum":
         return y.astype(x.dtype), None
-    ok, residual = verify_output(y, y_cs, cfg)
+    if residual is None:
+        ok, residual = verify_output(y, y_cs, cfg)
+    else:
+        ok = _residual_ok(y, residual, cfg)
     if cfg.mode == "verify":
         return y.astype(x.dtype), ok
     y = correct_output(y, y_cs, residual, cfg)
     return y.astype(x.dtype), ok
+
+
+def _residual_ok(y: jax.Array, residual: jax.Array, cfg: ABFTConfig):
+    """The §4.3 acceptance test: max |residual| <= tol * n * eps * |Y|."""
+    n = y.shape[-1]
+    eps = jnp.finfo(jnp.float32).eps if y.dtype in (jnp.float32, jnp.float64) \
+        else float(jnp.finfo(jnp.bfloat16).eps)
+    # mean-|.| scale: robust to a single corrupted element (see core.detect)
+    scale = jnp.mean(jnp.abs(y.astype(jnp.float32))) + 1e-30
+    tol = cfg.tol_factor * n * eps * scale
+    return jnp.max(jnp.abs(residual)) <= tol
 
 
 def verify_output(y: jax.Array, y_cs: jax.Array, cfg: ABFTConfig):
@@ -89,13 +154,7 @@ def verify_output(y: jax.Array, y_cs: jax.Array, cfg: ABFTConfig):
     wr = _weights(n, cfg.f, cfg.seed, jnp.float32)
     recomputed = y.astype(jnp.float32) @ wr
     residual = recomputed - y_cs.astype(jnp.float32)   # [..., f]
-    eps = jnp.finfo(jnp.float32).eps if y.dtype in (jnp.float32, jnp.float64) \
-        else float(jnp.finfo(jnp.bfloat16).eps)
-    # mean-|.| scale: robust to a single corrupted element (see core.detect)
-    scale = jnp.mean(jnp.abs(y.astype(jnp.float32))) + 1e-30
-    tol = cfg.tol_factor * n * eps * scale
-    ok = jnp.max(jnp.abs(residual)) <= tol
-    return ok, residual
+    return _residual_ok(y, residual, cfg), residual
 
 
 def correct_output(y, y_cs, residual, cfg: ABFTConfig):

@@ -21,6 +21,17 @@ The paper's algorithm, mapped to JAX SPMD:
     weighted psums along the surviving axis rebuild the lost blocks
     (T_checksum, the MPI_Reduce analogue), then the loop continues.
 
+  * Local update: when the per-device block shapes are MXU-tileable
+    (`local_update="auto"` on TPU, or "pallas" to force — interpret mode on
+    CPU), the per-step rank-kb update runs through the fused dual-checksum
+    Pallas kernel (`kernels.abft_matmul_acc_pallas`): each step's
+    Huang-Abraham checksum maintenance rides the MXU pass from the
+    VMEM-resident accumulator instead of separate XLA einsums, and the fused
+    verify/correct prologue scrubs a silently-corrupted C element at the
+    NEXT step's load (plus a post-loop scrub for a last-step flip).  The
+    plain-jnp update (`local_update="jnp"`, the default off-TPU for
+    non-tileable blocks) is preserved unchanged.
+
 Everything is jit-safe; the failure coordinates are static (recovery is
 compiled after failure detection, mirroring FT-MPI's out-of-band restart).
 """
@@ -133,12 +144,23 @@ def _local_summa(
     failure: Optional[FailureEvent],
     bitflip: Optional[BitflipEvent],
     preferred_dtype,
+    fused_plan=None,
 ):
     """Per-device SUMMA body (runs inside shard_map)."""
+    from repro.kernels import ops as kops  # lazy: avoids core<->kernels cycle
+
     my_row = lax.axis_index(row_axis)
     my_col = lax.axis_index(col_axis)
     mb, kb_local = a_blk.shape
     nb = b_blk.shape[1]
+    fused = fused_plan is not None
+    # The plain (non-FT) SUMMA baseline must not pay the per-step scrub nor
+    # be able to rewrite its own accumulator — verify only under an ABFT
+    # encoding (spec), where the scrub is the point.
+    fused_verify = fused and spec is not None
+    if fused:
+        wm = kops.kernel_weights(mb)
+        wn = kops.kernel_weights(nb).T
 
     def bcast_panels(a_blk, b_blk, k):
         # Masked-psum broadcast: owner column k sends its A panel along the
@@ -153,17 +175,34 @@ def _local_summa(
         return a_panel, b_panel
 
     def step(k, carry):
-        a_blk, b_blk, c_blk = carry
+        a_blk, b_blk, c_blk, state = carry
         a_panel, b_panel = bcast_panels(a_blk, b_blk, k)
-        c_blk = c_blk + jnp.dot(
-            a_panel.astype(preferred_dtype),
-            b_panel.astype(preferred_dtype),
-            preferred_element_type=jnp.float32,
-        ).astype(c_blk.dtype)
-        return (a_blk, b_blk, c_blk)
+        if fused:
+            # rank-kb update through the fused dual-checksum kernel: the
+            # checksum state is maintained (and C_in scrubbed) in the same
+            # MXU pass as the accumulation.
+            c_blk, state, _stats = kops.abft_matmul_acc(
+                a_panel.astype(preferred_dtype),
+                b_panel.astype(preferred_dtype),
+                c_blk, state, plan=fused_plan, wm=wm, wn=wn,
+                verify=fused_verify, out_dtype=jnp.float32,
+                backend="pallas", interpret=not kops.on_tpu(),
+            )
+        else:
+            c_blk = c_blk + jnp.dot(
+                a_panel.astype(preferred_dtype),
+                b_panel.astype(preferred_dtype),
+                preferred_element_type=jnp.float32,
+            ).astype(c_blk.dtype)
+        return (a_blk, b_blk, c_blk, state)
 
     c_blk = lax.pvary(jnp.zeros((mb, nb), dtype=jnp.float32), (row_axis, col_axis))
-    carry = (a_blk, b_blk, c_blk)
+    state = ()
+    if fused:
+        state = jax.tree.map(
+            lambda x: lax.pvary(x, (row_axis, col_axis)),
+            kops.acc_state_zeros(fused_plan))
+    carry = (a_blk, b_blk, c_blk, state)
 
     events = []
     if failure is not None:
@@ -176,7 +215,7 @@ def _local_summa(
     for kind, ev in events:
         carry = lax.fori_loop(k0, ev.step, step, carry)
         k0 = ev.step
-        a_blk, b_blk, c_blk = carry
+        a_blk, b_blk, c_blk, state = carry
         if kind == "fail":
             assert spec is not None, "failure injection requires an encoding"
             devices = (ev.devices if isinstance(ev, MultiFailureEvent)
@@ -207,16 +246,30 @@ def _local_summa(
                 b_blk = _recover_line(
                     b_blk, spec.cr, grid, my_col, my_row, tuple(cols), row,
                     line_axis=col_axis, f=spec.f)
-            carry = (a_blk, b_blk, c_blk)
+            if fused:
+                # the kernel-level checksum state predates the rebuild (the
+                # recovered blocks carry fresh rounding) — re-derive it from
+                # the recovered C so the next fused step doesn't misread the
+                # recovery noise as corruption.
+                state = kops.tile_checksums(
+                    c_blk.astype(jnp.float32), wm, wn,
+                    fused_plan.bm, fused_plan.bn)
+            carry = (a_blk, b_blk, c_blk, state)
         else:  # bit-flip: silent corruption of one partial-sum element
             hit = (my_row == ev.row) & (my_col == ev.col)
             c_blk = jnp.where(
                 hit, c_blk.at[0, 0].add(jnp.float32(ev.delta)), c_blk
             )
-            carry = (a_blk, b_blk, c_blk)
+            carry = (a_blk, b_blk, c_blk, state)
 
     carry = lax.fori_loop(k0, grid, step, carry)
-    return carry[2]
+    c_blk = carry[2]
+    if fused_verify:
+        # post-loop scrub: a flip after the last accumulate has no next
+        # kernel call to catch it; the state-vs-C residual repairs it here.
+        c_blk = kops.correct_from_state(
+            c_blk, carry[3], wm, wn, fused_plan.bm, fused_plan.bn)[0]
+    return c_blk
 
 
 def _recover_line(
@@ -288,6 +341,34 @@ def _recover_line(
     return x_blk
 
 
+def _resolve_local_update(local_update: str, mb: int, kb: int, nb: int):
+    """Map a `local_update` request to a fused BlockPlan (or None for jnp).
+
+    "pallas" demands the fused kernel (raises if the local block shapes are
+    not exactly tileable — padding inside the shard_map loop would churn
+    copies every step); "auto" fuses on TPU when exactly tileable; "jnp"
+    keeps the plain dot.
+    """
+    from repro.kernels import ops as kops  # lazy: avoids core<->kernels cycle
+
+    if local_update == "jnp":
+        return None
+    # require_exact: the carried checksum state lives across the whole SUMMA
+    # loop, and padding every step would churn copies — search only tilings
+    # that divide the local blocks (the cost model may otherwise prefer a
+    # padded plan for its fewer HBM re-streams).
+    plan = kops.pick_blocks(mb, kb, nb, carry=True, require_exact=True)
+    if local_update == "pallas":
+        if plan is None:
+            raise ValueError(
+                f"local_update='pallas' needs block-divisible local shapes, "
+                f"got ({mb},{kb},{nb})")
+        return plan
+    if local_update == "auto":
+        return plan if plan is not None and kops.on_tpu() else None
+    raise ValueError(f"unknown local_update {local_update!r}")
+
+
 def abft_summa(
     a_enc: jax.Array,
     b_enc: jax.Array,
@@ -298,17 +379,24 @@ def abft_summa(
     failure: Optional[FailureEvent] = None,
     bitflip: Optional[BitflipEvent] = None,
     preferred_dtype=jnp.float32,
+    local_update: str = "auto",
 ) -> jax.Array:
     """Fault-tolerant distributed matmul of encoded operands.
 
     a_enc: [M + f*mb, K] row-encoded; b_enc: [K, N + f*nb] col-encoded.
     Returns the fully-encoded product C_F = [M+f*mb, N+f*nb] (Eq. 1).
     The grid is square: mesh.shape[axes[0]] == mesh.shape[axes[1]].
+    `local_update` selects the per-step rank-kb update: "pallas" fuses the
+    checksum maintenance + SDC scrub into the Pallas GEMM kernel, "jnp" is
+    the plain dot, "auto" fuses on TPU when the local blocks are tileable.
     """
     row_axis, col_axis = axes
     grid = mesh.shape[row_axis]
     if mesh.shape[col_axis] != grid:
         raise ValueError("ABFT SUMMA needs a square grid")
+    fused_plan = _resolve_local_update(
+        local_update, a_enc.shape[0] // grid, a_enc.shape[1] // grid,
+        b_enc.shape[1] // grid)
 
     body = functools.partial(
         _local_summa,
@@ -319,12 +407,15 @@ def abft_summa(
         failure=failure,
         bitflip=bitflip,
         preferred_dtype=preferred_dtype,
+        fused_plan=fused_plan,
     )
     fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(row_axis, col_axis), P(row_axis, col_axis)),
         out_specs=P(row_axis, col_axis),
+        # pallas_call has no replication/VMA rule on this jax
+        check_vma=fused_plan is None,
     )
     return fn(a_enc, b_enc)
 
@@ -336,10 +427,14 @@ def summa(
     *,
     axes: Tuple[str, str] = ("rows", "cols"),
     preferred_dtype=jnp.float32,
+    local_update: str = "auto",
 ) -> jax.Array:
     """Plain (non-FT) SUMMA — the paper's PBLAS PDGEMM baseline."""
     row_axis, col_axis = axes
     grid = mesh.shape[row_axis]
+    fused_plan = _resolve_local_update(
+        local_update, a.shape[0] // grid, a.shape[1] // grid,
+        b.shape[1] // grid)
     body = functools.partial(
         _local_summa,
         grid=grid,
@@ -349,11 +444,13 @@ def summa(
         failure=None,
         bitflip=None,
         preferred_dtype=preferred_dtype,
+        fused_plan=fused_plan,
     )
     fn = jax.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(row_axis, col_axis), P(row_axis, col_axis)),
         out_specs=P(row_axis, col_axis),
+        check_vma=fused_plan is None,
     )
     return fn(a, b)

@@ -1,4 +1,4 @@
 """Pallas TPU kernels for the ABFT hot spots, with jnp oracles in ref.py."""
 from repro.kernels import ops, ref
-from repro.kernels.abft_matmul import abft_matmul_pallas
+from repro.kernels.abft_matmul import abft_matmul_acc_pallas, abft_matmul_pallas
 from repro.kernels.checksum_encode import checksum_encode_pallas

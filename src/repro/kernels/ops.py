@@ -2,54 +2,522 @@
 
 On TPU the kernels run compiled (interpret=False); on CPU (this container)
 they run in interpret mode for correctness, with a pure-XLA fallback for
-shapes the tiling doesn't cover.  `use_pallas` is resolved once per call
-site; benchmarks exercise both paths.
+shapes where the tiling would waste too much work.  ``pick_blocks`` plans the
+tiling for ANY shape: ragged edges are zero-padded to the chosen MXU-aligned
+blocks (zero rows/cols checksum to zero, so padding commutes with the
+Huang-Abraham encoding) and the plan is chosen by a bytes-based cost model
+over candidate tilings.  ``use_pallas`` is resolved once per call site;
+benchmarks exercise both paths.
+
+This module is also where the fused ABFT-GEMM family gets its gradient: the
+one-shot dispatcher carries a custom VJP (plain fp32 dots, with the checksum
+cotangents folded back through W_m / W_n), so model layers can run the fused
+forward inside ``jax.grad``.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels import ref
-from repro.kernels.abft_matmul import abft_matmul_pallas
+from repro.kernels.abft_matmul import (STATS_WIDTH, abft_matmul_acc_pallas,
+                                       abft_matmul_pallas)
 from repro.kernels.checksum_encode import checksum_encode_pallas
 
-__all__ = ["abft_matmul", "checksum_encode", "on_tpu", "pick_blocks"]
+__all__ = [
+    "BlockPlan", "abft_matmul", "abft_matmul_acc", "acc_state_zeros",
+    "checksum_encode", "correct_from_state", "kernel_weights", "on_tpu",
+    "pick_blocks", "plan_accounting", "reduce_state", "tile_checksums",
+    "vmem_bytes",
+]
+
+KERNEL_F = 2  # checksums per direction: plain sum + one weighted row
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def pick_blocks(m: int, k: int, n: int, vmem_budget: int = 8 * 2**20):
-    """Largest MXU-aligned blocks whose working set fits the VMEM budget.
+def kernel_weights(m: int, f: int = KERNEL_F, dtype=jnp.float32) -> jax.Array:
+    """[f, m] checkpoint matrix used by the fused kernels (row 0 = sum)."""
+    return ref.default_weights(m, f, dtype=dtype)
 
-    Working set ~ 2*(bm*bk + bk*bn)*in_bytes (double-buffered streams)
-    + bm*bn*4 (fp32 accumulator).  Prefers square-ish C tiles and deep k.
+
+# ---------------------------------------------------------------------------
+# Tiling plan
+# ---------------------------------------------------------------------------
+
+_CANDIDATE_BLOCKS = (128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A padded MXU-aligned tiling for an (m, k, n) matmul.
+
+    ``pm/pk/pn`` are the zero-padded dims (multiples of ``bm/bk/bn``);
+    ``cost_bytes`` is the modeled HBM traffic of the tiled GEMM including
+    padding waste and the checksum-partial writes.
     """
-    def fits(bm, bn, bk):
-        return 2 * (bm * bk + bk * bn) * 2 + bm * bn * 4 <= vmem_budget
+    m: int
+    k: int
+    n: int
+    bm: int
+    bn: int
+    bk: int
+    pm: int
+    pk: int
+    pn: int
+    cost_bytes: int
 
-    for bm, bn, bk in [
-        (512, 512, 512), (256, 256, 512), (256, 256, 256),
-        (128, 128, 512), (128, 128, 256), (128, 128, 128),
-    ]:
-        if m % bm == 0 and n % bn == 0 and k % bk == 0 and fits(bm, bn, bk):
-            return bm, bn, bk
-    return None
+    @property
+    def grid(self) -> Tuple[int, int, int]:
+        return (self.pm // self.bm, self.pn // self.bn, self.pk // self.bk)
+
+    @property
+    def exact(self) -> bool:
+        return (self.pm, self.pk, self.pn) == (self.m, self.k, self.n)
+
+    @property
+    def waste(self) -> float:
+        """Relative extra FLOPs spent on padding (0.0 for aligned shapes)."""
+        return self.pm * self.pk * self.pn / (self.m * self.k * self.n) - 1.0
 
 
-def abft_matmul(a: jax.Array, b: jax.Array, *, force_pallas: bool = False):
-    """C = A @ B with fused column-checksum row -> (c, colsum[n] fp32)."""
+def _round_up(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, *, in_bytes: int = 4,
+               out_bytes: int = 4, f: int = KERNEL_F,
+               carry: bool = False) -> int:
+    """Modeled VMEM working set of one kernel grid step: double-buffered
+    A/B streams, fp32 accumulator, C_in tile (accumulate variant), and the
+    weight/checksum tiles.  Shared by ``pick_blocks`` and the benches."""
+    return (2 * (bm * bk + bk * bn) * in_bytes
+            + bm * bn * 4
+            + (bm * bn * out_bytes if carry else 0)
+            + 2 * 4 * f * (bm + bn))
+
+
+def plan_accounting(plan: BlockPlan, *, in_bytes: int = 4,
+                    out_bytes: int = 4, f: int = KERNEL_F,
+                    carry: bool = False) -> dict:
+    """Structural byte/FLOP accounting for one BlockPlan.
+
+    The single source of truth for the kernel's modeled HBM traffic — used
+    both by ``pick_blocks`` to score candidate tilings and by
+    ``benchmarks.bench_kernels`` to report it.  A is streamed once per
+    n-tile column, B once per m-tile row, C written once (read+written once
+    more with a carried state); both fused checksum directions add ZERO
+    extra reads (``extra_hbm_rd_col``/``_row``) — only the per-tile partial
+    writes (``cs_wr_bytes``) — whereas unfused post-GEMM encode einsums
+    would re-read all of C once per direction (``unfused_extra_rd``).
+    """
+    mt, nt, _ = plan.grid
+    gemm_rd = (plan.pm * plan.pk * nt * in_bytes
+               + plan.pk * plan.pn * mt * in_bytes)
+    gemm_wr = plan.pm * plan.pn * out_bytes
+    cs_wr = mt * f * plan.pn * 4 + nt * plan.pm * f * 4
+    carry_bytes = 0
+    if carry:  # C_in read + carried-state read + stats write
+        carry_bytes = (plan.pm * plan.pn * out_bytes + cs_wr
+                       + mt * nt * STATS_WIDTH * 4)
+    flops = 2 * plan.pm * plan.pk * plan.pn
+    return dict(
+        gemm_bytes=gemm_rd + gemm_wr,
+        extra_hbm_rd_col=0,                   # reduced from the VMEM acc
+        extra_hbm_rd_row=0,
+        cs_wr_bytes=cs_wr,
+        carry_bytes=carry_bytes,
+        unfused_extra_rd=2 * plan.pm * plan.pn * out_bytes,
+        flops=flops,
+        cs_flops=4 * f * plan.pm * plan.pn,   # both directions, FMA=2 flops
+        total_bytes=gemm_rd + gemm_wr + cs_wr + carry_bytes,
+    )
+
+
+def pick_blocks(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    vmem_budget: int = 8 * 2**20,
+    in_bytes: int = 4,
+    out_bytes: int = 4,
+    f: int = KERNEL_F,
+    carry: bool = False,
+    require_exact: bool = False,
+) -> Optional[BlockPlan]:
+    """Plan the cheapest MXU-aligned tiling for an (m, k, n) ABFT-GEMM.
+
+    Candidate (bm, bn, bk) tilings are scored by ``plan_accounting``'s
+    modeled HBM bytes on the zero-padded dims, so padding waste is priced
+    in.  Tilings whose working set (double-buffered A/B streams, fp32
+    accumulator, C_in tile when ``carry``, weight/checksum tiles) exceeds
+    ``vmem_budget`` are discarded.  ``require_exact`` restricts the search
+    to tilings that divide (m, k, n) with no padding — callers that keep a
+    long-lived carried state (the SUMMA local update) need this, since the
+    cost model may otherwise prefer a padded plan whose fewer HBM re-streams
+    buy extra MXU work.  Returns None if no candidate qualifies.
+    """
+    best: Optional[BlockPlan] = None
+    best_key = None
+    for bm in _CANDIDATE_BLOCKS:
+        for bn in _CANDIDATE_BLOCKS:
+            for bk in _CANDIDATE_BLOCKS:
+                if vmem_bytes(bm, bn, bk, in_bytes=in_bytes,
+                              out_bytes=out_bytes, f=f,
+                              carry=carry) > vmem_budget:
+                    continue
+                pm, pk, pn = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+                if require_exact and (pm, pk, pn) != (m, k, n):
+                    continue
+                cand = BlockPlan(m=m, k=k, n=n, bm=bm, bn=bn, bk=bk,
+                                 pm=pm, pk=pk, pn=pn, cost_bytes=0)
+                cost = plan_accounting(cand, in_bytes=in_bytes,
+                                       out_bytes=out_bytes, f=f,
+                                       carry=carry)["total_bytes"]
+                # prefer cheaper traffic; tie-break toward bigger tiles
+                key = (cost, -(bm * bn * bk), -bk)
+                if best_key is None or key < best_key:
+                    best_key = key
+                    best = dataclasses.replace(cand, cost_bytes=cost)
+    return best
+
+
+def _pad2(x: jax.Array, pr: int, pc: int) -> jax.Array:
+    r, c = x.shape
+    if (r, c) == (pr, pc):
+        return x
+    return jnp.pad(x, ((0, pr - r), (0, pc - c)))
+
+
+def _pad_weights(wm, wn, plan: BlockPlan):
+    """Zero-pad W_m: [f, m] -> [f, pm] and W_n: [n, f] -> [pn, f]."""
+    f = wm.shape[0]
+    return _pad2(wm, f, plan.pm), _pad2(wn, plan.pn, f)
+
+
+# ---------------------------------------------------------------------------
+# One-shot fused matmul (with custom VJP)
+# ---------------------------------------------------------------------------
+
+
+def _run_oneshot(plan: BlockPlan, out_dtype, interpret, a, b, wm, wn):
+    a_p = _pad2(a, plan.pm, plan.pk)
+    b_p = _pad2(b, plan.pk, plan.pn)
+    wm_p, wn_p = _pad_weights(wm, wn, plan)
+    c, ccol, crow = abft_matmul_pallas(
+        a_p, b_p, wm_p, wn_p, bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        out_dtype=out_dtype, interpret=interpret)
+    cs_col = jnp.sum(ccol, axis=0)[:, : plan.n]
+    cs_row = jnp.sum(crow, axis=0)[: plan.m, :]
+    return c[: plan.m, : plan.n], cs_col, cs_row
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _fused_mm(plan, out_dtype, interpret, a, b, wm, wn):
+    return _run_oneshot(plan, out_dtype, interpret, a, b, wm, wn)
+
+
+def _fused_mm_fwd(plan, out_dtype, interpret, a, b, wm, wn):
+    return _run_oneshot(plan, out_dtype, interpret, a, b, wm, wn), (a, b, wm, wn)
+
+
+def _fused_mm_bwd(plan, out_dtype, interpret, res, g):
+    a, b, wm, wn = res
+    gc, gcol, grow = g
+    # fold the checksum cotangents back into the C cotangent:
+    #   cs_col = W_m @ C  =>  dC += W_m^T @ g_col
+    #   cs_row = C @ W_n  =>  dC += g_row @ W_n^T
+    gc32 = (gc.astype(jnp.float32)
+            + jnp.dot(wm.astype(jnp.float32).T, gcol)
+            + jnp.dot(grow, wn.astype(jnp.float32).T))
+    ga = jnp.dot(gc32, b.astype(jnp.float32).T).astype(a.dtype)
+    gb = jnp.dot(a.astype(jnp.float32).T, gc32).astype(b.dtype)
+    # the encoding weights are fixed constants of the scheme, never trained
+    return ga, gb, jnp.zeros_like(wm), jnp.zeros_like(wn)
+
+
+_fused_mm.defvjp(_fused_mm_fwd, _fused_mm_bwd)
+
+
+def abft_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    f: int = KERNEL_F,
+    wm: Optional[jax.Array] = None,
+    wn: Optional[jax.Array] = None,
+    out_dtype=None,
+    force_pallas: bool = False,
+    max_waste: float = 1.0,
+    plan: Optional[BlockPlan] = None,
+):
+    """C = A @ B with fused dual checksums -> (c, cs_col [f,n], cs_row [m,f]).
+
+    Custom weight matrices turn the row direction into arbitrary fused
+    epilogue reductions of C (e.g. ``core.abft_gemm`` passes
+    ``wn = [w_r; -I]`` so cs_row IS the verification residual, with zero
+    extra HBM reads of C).  Differentiable via a custom VJP.
+    """
     m, k = a.shape
     n = b.shape[1]
-    blocks = pick_blocks(m, k, n)
-    if blocks is not None and (on_tpu() or force_pallas):
-        bm, bn, bk = blocks
-        return abft_matmul_pallas(
-            a, b, bm=bm, bn=bn, bk=bk, interpret=not on_tpu()
+    out_dtype = out_dtype or a.dtype
+    if wm is not None:
+        f = wm.shape[0]   # before building the default wn: shapes must agree
+    wm = kernel_weights(m, f) if wm is None else wm
+    wn = kernel_weights(n, f).T if wn is None else wn
+    if wn.shape != (n, f):
+        raise ValueError(f"wn shape {wn.shape} != ({n}, {f})")
+    if plan is None:
+        plan = pick_blocks(m, k, n, in_bytes=a.dtype.itemsize,
+                           out_bytes=jnp.dtype(out_dtype).itemsize, f=f)
+    if plan is not None and (on_tpu() or force_pallas) \
+            and plan.waste <= max_waste:
+        return _fused_mm(plan, jnp.dtype(out_dtype), not on_tpu(),
+                         a, b, wm, wn)
+    return ref.abft_matmul_ref(a, b, wm, wn, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Accumulate variant + carried checksum state
+# ---------------------------------------------------------------------------
+
+
+def acc_state_zeros(plan: BlockPlan, f: int = KERNEL_F):
+    """Carried checksum state for C = 0 under ``plan`` (padded layout)."""
+    return (
+        jnp.zeros((plan.pm // plan.bm, f, plan.pn), jnp.float32),
+        jnp.zeros((plan.pn // plan.bn, plan.pm, f), jnp.float32),
+    )
+
+
+def tile_checksums(c: jax.Array, wm: jax.Array, wn: jax.Array,
+                   bm: int, bn: int):
+    """Per-tile dual checksums of a [pm, pn] array (pm % bm == pn % bn == 0).
+
+    Returns (ccol: [pm/bm, f, pn], crow: [pn/bn, pm, f]) — the carried-state
+    layout of ``abft_matmul_acc_pallas``; used to (re)derive a consistent
+    state from data, e.g. after a SUMMA failure recovery rebuilt C blocks.
+    """
+    pm, pn = c.shape
+    f = wm.shape[0]
+    mt, nt = pm // bm, pn // bn
+    c32 = c.astype(jnp.float32)
+    wm_t = wm.astype(jnp.float32).reshape(f, mt, bm).transpose(1, 0, 2)
+    ccol = jnp.einsum("tfb,tbn->tfn", wm_t, c32.reshape(mt, bm, pn))
+    wn_t = wn.astype(jnp.float32).reshape(nt, bn, f)
+    crow = jnp.einsum("tmb,tbf->tmf",
+                      c32.reshape(pm, nt, bn).transpose(1, 0, 2), wn_t)
+    return ccol, crow
+
+
+def reduce_state(state, m: Optional[int] = None, n: Optional[int] = None):
+    """Reduce a per-tile state to full checksums (cs_col [f,n], cs_row [m,f])."""
+    ccol, crow = state
+    cs_col = jnp.sum(ccol, axis=0)
+    cs_row = jnp.sum(crow, axis=0)
+    if n is not None:
+        cs_col = cs_col[:, :n]
+    if m is not None:
+        cs_row = cs_row[:m, :]
+    return cs_col, cs_row
+
+
+def correct_from_state(c: jax.Array, state, wm: jax.Array, wn: jax.Array,
+                       bm: int, bn: int, *, tol_factor: float = 64.0):
+    """jnp twin of the kernel's verify/correct prologue, on a full [pm, pn] C.
+
+    Locates a single corrupted element against the carried per-tile state
+    (row via the row-direction residual, column via the column-direction
+    residual) and repairs it by masked re-computation from the carried
+    plain-sum column checksum.  Used for the post-loop scrub of the fused
+    SUMMA path (a flip after the last accumulate has no next kernel call to
+    catch it) and as the semantic oracle in tests.
+    Returns (fixed, detected: bool scalar, corrected: bool scalar,
+    row: int32 scalar, col: int32 scalar) — row/col are the located element
+    (-1 when nothing was corrected).
+    """
+    ccol_c, crow_c = state
+    pm, pn = c.shape
+    # fp32 eps: carried checksums are fp32 functions of the rounded stored
+    # values, so storage dtype adds no recompute mismatch (see kernel).
+    eps_c = float(jnp.finfo(jnp.float32).eps)
+    c32 = c.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(c32)) + 1e-30
+    tol_c = tol_factor * bm * eps_c * scale
+    tol_r = tol_factor * bn * eps_c * scale
+    detected = jnp.zeros((), bool)
+    corrected = jnp.zeros((), bool)
+    loc_r = jnp.full((), -1, jnp.int32)
+    loc_c = jnp.full((), -1, jnp.int32)
+    for it in range(2):
+        ccol_now, crow_now = tile_checksums(c32, wm, wn, bm, bn)
+        rcc = ccol_now - ccol_c                       # [mt, f, pn]
+        rcr = crow_now - crow_c                       # [nt, pm, f]
+        acol = jnp.sum(jnp.abs(rcc[:, 0, :]), axis=0)  # [pn]
+        arow = jnp.sum(jnp.abs(rcr[:, :, 0]), axis=0)  # [pm]
+        cmax, cidx = jnp.max(acol), jnp.argmax(acol)
+        rmax, ridx = jnp.max(arow), jnp.argmax(arow)
+        c2nd = jnp.max(jnp.where(jnp.arange(pn) == cidx, 0.0, acol))
+        r2nd = jnp.max(jnp.where(jnp.arange(pm) == ridx, 0.0, arow))
+        single = (
+            (cmax > tol_c) & (rmax > tol_r)
+            & (c2nd <= jnp.maximum(0.25 * cmax, tol_c))
+            & (r2nd <= jnp.maximum(0.25 * rmax, tol_r))
         )
-    return ref.abft_matmul_ref(a, b)
+        if it == 0:
+            detected = (cmax > tol_c) | (rmax > tol_r)
+            corrected = single
+            loc_r = jnp.where(single, ridx.astype(jnp.int32), loc_r)
+            loc_c = jnp.where(single, cidx.astype(jnp.int32), loc_c)
+        # masked re-computation from the carried column checksum of the
+        # tile-row holding (ridx, cidx)
+        tile_i = ridx // bm
+        col = c32[:, cidx]
+        col = col.at[ridx].set(0.0)
+        seg = lax.dynamic_slice(col, (tile_i * bm,), (bm,))
+        w_seg = lax.dynamic_slice(wm.astype(jnp.float32)[0], (tile_i * bm,),
+                                  (bm,))
+        carried = ccol_c[tile_i, 0, cidx]
+        x_new = (carried - jnp.dot(w_seg, seg)) / (wm[0, ridx] + 1e-30)
+        c32 = jnp.where(single, c32.at[ridx, cidx].set(x_new), c32)
+    return c32.astype(c.dtype), detected, corrected, loc_r, loc_c
+
+
+def _tile_verify_correct(c32, state, wm, wn, bm, bn, *, tol_factor):
+    """Vectorized-over-tiles twin of the kernel's verify/correct prologue.
+
+    Exactly the math of ``kernels.abft_matmul._verify_correct``, batched
+    over the [mt, nt] tile grid: per-tile residuals vs the carried state,
+    one concentration-gated repair PER TILE by masked re-computation from
+    the carried plain-sum column checksum, two passes.
+    Returns (fixed c32 [pm, pn], stats [mt, nt, STATS_WIDTH]).
+    """
+    ccol, crow = state
+    pm, pn = c32.shape
+    mt, nt = pm // bm, pn // bn
+    f = wm.shape[0]
+    eps_c = float(jnp.finfo(jnp.float32).eps)
+    t = c32.reshape(mt, bm, nt, bn).transpose(0, 2, 1, 3)        # [mt,nt,bm,bn]
+    wmt = wm.astype(jnp.float32).reshape(f, mt, bm).transpose(1, 0, 2)
+    wnt = wn.astype(jnp.float32).reshape(nt, bn, f)
+    ccol_t = ccol.reshape(mt, f, nt, bn).transpose(0, 2, 1, 3)   # [mt,nt,f,bn]
+    crow_t = crow.reshape(nt, mt, bm, f).transpose(1, 0, 2, 3)   # [mt,nt,bm,f]
+    scale = jnp.mean(jnp.abs(t), axis=(2, 3)) + 1e-30            # [mt,nt]
+    tol_c = tol_factor * bm * eps_c * scale
+    tol_r = tol_factor * bn * eps_c * scale
+    row_i = jnp.arange(bm)
+    col_i = jnp.arange(bn)
+
+    def take(arr, idx):
+        return jnp.take_along_axis(arr, idx[..., None], axis=-1)[..., 0]
+
+    stats = None
+    for it in range(2):
+        rc = jnp.einsum("xfb,xybn->xyfn", wmt, t) - ccol_t       # [mt,nt,f,bn]
+        rr = jnp.einsum("xybn,ynf->xybf", t, wnt) - crow_t       # [mt,nt,bm,f]
+        ac = jnp.abs(rc[:, :, 0, :])                             # [mt,nt,bn]
+        ar = jnp.abs(rr[:, :, :, 0])                             # [mt,nt,bm]
+        cmax, cidx = ac.max(-1), ac.argmax(-1)                   # [mt,nt]
+        rmax, ridx = ar.max(-1), ar.argmax(-1)
+        c2 = jnp.where(col_i[None, None, :] == cidx[..., None], 0.0, ac).max(-1)
+        r2 = jnp.where(row_i[None, None, :] == ridx[..., None], 0.0, ar).max(-1)
+        detected = (cmax > tol_c) | (rmax > tol_r)
+        single = ((cmax > tol_c) & (rmax > tol_r)
+                  & (c2 <= jnp.maximum(0.25 * cmax, tol_c))
+                  & (r2 <= jnp.maximum(0.25 * rmax, tol_r)))
+        mask = ((row_i[None, None, :, None] == ridx[..., None, None])
+                & (col_i[None, None, None, :] == cidx[..., None, None]))
+        masked = jnp.where(mask, 0.0, t)
+        s0 = jnp.einsum("xb,xybn->xyn", wmt[:, 0, :], masked)    # [mt,nt,bn]
+        num = take(ccol_t[:, :, 0, :], cidx) - take(s0, cidx)
+        w0r = take(jnp.broadcast_to(wmt[:, None, 0, :], (mt, nt, bm)), ridx)
+        x_new = num / (w0r + 1e-30)
+        t = jnp.where(single[..., None, None] & mask,
+                      x_new[..., None, None], t)
+        if it == 0:
+            r_glob = jnp.arange(mt)[:, None] * bm + ridx
+            c_glob = jnp.arange(nt)[None, :] * bn + cidx
+            stats = jnp.stack([
+                detected.astype(jnp.float32),
+                single.astype(jnp.float32),
+                jnp.where(single, r_glob.astype(jnp.float32), -1.0),
+                jnp.where(single, c_glob.astype(jnp.float32), -1.0),
+                cmax, rmax, tol_c, scale,
+            ], axis=-1)
+    return t.transpose(0, 2, 1, 3).reshape(pm, pn), stats
+
+
+def abft_matmul_acc(
+    a: jax.Array,
+    b: jax.Array,
+    c_in: jax.Array,
+    state,
+    *,
+    plan: BlockPlan,
+    wm: Optional[jax.Array] = None,
+    wn: Optional[jax.Array] = None,
+    verify: bool = True,
+    tol_factor: float = 64.0,
+    out_dtype=None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+):
+    """C_out = C_in + A @ B with carried checksum state and fused scrub.
+
+    ``state`` is the (ccol, crow) pair from ``acc_state_zeros`` or a prior
+    call under the same ``plan``.  ``backend``: "pallas" runs the fused
+    kernel (interpret mode off-TPU), "jnp" the XLA twin (same semantics,
+    separate einsums), "auto" picks pallas on TPU.  Returns
+    (c_out [m, n], new_state, stats [mt, nt, STATS_WIDTH]).
+    """
+    m, n = c_in.shape
+    out_dtype = out_dtype or c_in.dtype
+    f = KERNEL_F if wm is None else wm.shape[0]
+    wm = kernel_weights(m, f) if wm is None else wm
+    wn = kernel_weights(n, f).T if wn is None else wn
+    if wn.shape != (n, f):
+        raise ValueError(f"wn shape {wn.shape} != ({n}, {f})")
+    wm_p, wn_p = _pad_weights(wm, wn, plan)
+    a_p = _pad2(a, plan.pm, plan.pk)
+    b_p = _pad2(b, plan.pk, plan.pn)
+    c_p = _pad2(c_in, plan.pm, plan.pn)
+    ccol_in, crow_in = state
+    use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    if use_pallas:
+        interpret = not on_tpu() if interpret is None else interpret
+        c, ccol, crow, stats = abft_matmul_acc_pallas(
+            a_p, b_p, c_p, ccol_in, crow_in, wm_p, wn_p,
+            bm=plan.bm, bn=plan.bn, bk=plan.bk, verify=verify,
+            tol_factor=tol_factor, out_dtype=out_dtype, interpret=interpret)
+        return c[:m, :n], (ccol, crow), stats
+    # --- XLA twin: identical semantics, separate (unfused) einsums --------
+    c32 = c_p.astype(jnp.float32)
+    mt, nt = plan.pm // plan.bm, plan.pn // plan.bn
+    if verify:
+        c32, stats = _tile_verify_correct(
+            c32, state, wm_p, wn_p, plan.bm, plan.bn, tol_factor=tol_factor)
+    else:
+        stats = jnp.zeros((mt, nt, STATS_WIDTH), jnp.float32)
+        stats = stats.at[..., 2:4].set(-1.0)
+    c32 = c32 + jnp.dot(a_p.astype(jnp.float32), b_p.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    c_out = c32.astype(out_dtype)
+    new_state = tile_checksums(c_out.astype(jnp.float32), wm_p, wn_p,
+                               plan.bm, plan.bn)
+    return c_out[:m, :n], new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# Diskless-checkpoint encode
+# ---------------------------------------------------------------------------
 
 
 def checksum_encode(x: jax.Array, a: jax.Array, *, force_pallas: bool = False):

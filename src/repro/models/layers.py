@@ -4,6 +4,10 @@ Params are plain nested dicts of jax.Arrays.  Every `*_init` takes a PRNGKey
 and returns params; every `*_apply` is side-effect free.  Big projections go
 through `core.abft_gemm.abft_matmul` when ABFT protection is enabled — that
 is the paper's technique living inside the model as a first-class feature.
+With `ABFTConfig.backend="pallas"` (or "auto" on TPU) those projections run
+the fused dual-checksum Pallas kernel, which also reduces the verification
+residual in its epilogue — checksum + verify ride the MXU pass instead of
+separate einsums (see `core.abft_gemm` / `kernels.abft_matmul`).
 """
 from __future__ import annotations
 

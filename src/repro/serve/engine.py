@@ -42,13 +42,18 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, abft_mode: str = "off"):
+                 max_len: int = 256, abft_mode: str = "off",
+                 abft_backend: str = "auto"):
         assert cfg.n_enc_layers == 0, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.abft = StepOptions(abft_mode=abft_mode).abft
+        # abft_backend="pallas" puts every protected projection of both
+        # compiled programs (prefill_1, decode_B) on the fused dual-checksum
+        # kernel; "auto" does so on TPU (see core.abft_gemm).
+        self.abft = StepOptions(abft_mode=abft_mode,
+                                abft_backend=abft_backend).abft
 
         self.cache = tf.init_cache(cfg, slots, max_len)
         # force vector per-slot indices (init_cache makes scalars)

@@ -36,6 +36,10 @@ class StepOptions:
     zero1: bool = True
     abft_mode: str = "off"         # off | checksum | verify | correct
     abft_f: int = 2
+    # matmul-ABFT backend: "pallas" routes the protected projections through
+    # the fused dual-checksum kernel (kernels.ops), "ref" keeps plain XLA,
+    # "auto" fuses on TPU (core.abft_gemm dispatch).
+    abft_backend: str = "auto"
     grad_compression: str = "none"  # none | int8_ef
     aux_weight: float = 0.01
     # defer the DP gradient all-reduce to AFTER microbatch accumulation
@@ -81,7 +85,8 @@ class StepOptions:
     def abft(self) -> Optional[ABFTConfig]:
         if self.abft_mode == "off":
             return None
-        return ABFTConfig(mode=self.abft_mode, f=self.abft_f)
+        return ABFTConfig(mode=self.abft_mode, f=self.abft_f,
+                          backend=self.abft_backend)
 
 
 # ---------------------------------------------------------------------------

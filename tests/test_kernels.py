@@ -6,7 +6,8 @@ import pytest
 
 from repro.core.checksum import checkpoint_matrix
 from repro.kernels import ops, ref
-from repro.kernels.abft_matmul import abft_matmul_pallas
+from repro.kernels.abft_matmul import (abft_matmul_acc_pallas,
+                                       abft_matmul_pallas)
 from repro.kernels.checksum_encode import checksum_encode_pallas
 
 MATMUL_CASES = [
@@ -19,30 +20,268 @@ MATMUL_CASES = [
 ]
 
 
+def _weights(m, n, f=2):
+    return ops.kernel_weights(m, f), ops.kernel_weights(n, f).T
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("m,k,n,bm,bn,bk", MATMUL_CASES)
 def test_abft_matmul_kernel(rs, m, k, n, bm, bn, bk, dtype):
     a = jnp.asarray(rs.standard_normal((m, k)), dtype)
     b = jnp.asarray(rs.standard_normal((k, n)), dtype)
-    c, cs = abft_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
-    c_ref, cs_ref = ref.abft_matmul_ref(a, b)
+    wm, wn = _weights(m, n)
+    c, ccol, crow = abft_matmul_pallas(a, b, wm, wn, bm=bm, bn=bn, bk=bk,
+                                       interpret=True)
+    cs_col = jnp.sum(ccol, axis=0)
+    cs_row = jnp.sum(crow, axis=0)
+    c_ref, col_ref, row_ref = ref.abft_matmul_ref(a, b, wm, wn)
     tol = 1e-4 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(c, np.float32),
                                np.asarray(c_ref, np.float32),
                                rtol=tol, atol=tol * 10)
-    # checksum accumulates in fp32 in both paths
-    np.testing.assert_allclose(np.asarray(cs), np.asarray(cs_ref),
+    # checksums accumulate in fp32 in both paths (of the rounded output)
+    cs_tol = 1e-3 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(cs_col), np.asarray(col_ref),
+                               rtol=cs_tol, atol=k * cs_tol / 10)
+    np.testing.assert_allclose(np.asarray(cs_row), np.asarray(row_ref),
+                               rtol=cs_tol, atol=k * cs_tol / 10)
+
+
+def test_kernel_checksums_are_true_weighted_sums(rs):
+    """Both fused checksum directions equal the weighted sums of the
+    kernel's OWN output (row 0 = plain Huang-Abraham sum)."""
+    a = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    wm, wn = _weights(256, 256)
+    c, ccol, crow = abft_matmul_pallas(a, b, wm, wn, bm=128, bn=128, bk=128,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(ccol, axis=0)),
+                               np.asarray(wm @ c), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(jnp.sum(crow, axis=0)),
+                               np.asarray(c @ wn), rtol=1e-4, atol=1e-2)
+    # plain-sum rows/cols really are the plain sums
+    np.testing.assert_allclose(np.asarray(jnp.sum(ccol, axis=0)[0]),
+                               np.asarray(jnp.sum(c, axis=0)),
+                               rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(384, 640, 896), (300, 520, 700)])
+def test_ragged_shapes_take_pallas_path(rs, m, k, n):
+    """pick_blocks pads ragged edges instead of bailing to the reference."""
+    a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    c1, col1, row1 = ops.abft_matmul(a, b, force_pallas=True)
+    c2, col2, row2 = ops.abft_matmul(a, b, force_pallas=False)
+    assert c1.shape == (m, n) and col1.shape[1] == n and row1.shape[0] == m
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(col1), np.asarray(col2),
+                               rtol=1e-3, atol=k * 1e-4)
+    np.testing.assert_allclose(np.asarray(row1), np.asarray(row2),
                                rtol=1e-3, atol=k * 1e-4)
 
 
-def test_kernel_checksum_is_true_colsum(rs):
-    """The fused checksum equals the column sums of the kernel's own C."""
-    a = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
-    b = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
-    c, cs = abft_matmul_pallas(a, b, bm=128, bn=128, bk=128, interpret=True)
-    np.testing.assert_allclose(np.asarray(cs),
-                               np.asarray(jnp.sum(c, axis=0)),
-                               rtol=1e-4, atol=1e-2)
+def test_block_picker_plans_any_shape():
+    exact = ops.pick_blocks(512, 1024, 512)
+    assert exact is not None and exact.exact and exact.waste == 0.0
+    ragged = ops.pick_blocks(100, 100, 100)
+    assert ragged is not None and not ragged.exact
+    assert ragged.pm % ragged.bm == 0 and ragged.pk % ragged.bk == 0 \
+        and ragged.pn % ragged.bn == 0
+    assert ragged.pm >= 100 and ragged.waste > 0
+    # bytes-based cost model: the chosen plan is never costlier than any
+    # other candidate (tiny blocks re-stream A/B more often)
+    small = 2 * (128 * 128 * 2) * 4 + 128 * 128 * 4 + 2 * 4 * 2 * 256
+    big = ops.pick_blocks(2048, 2048, 2048)
+    constrained = ops.pick_blocks(2048, 2048, 2048, vmem_budget=small)
+    assert big.cost_bytes <= constrained.cost_bytes
+    assert big.bm * big.bn * big.bk > constrained.bm * constrained.bn * constrained.bk
+    # require_exact (the SUMMA local-update contract): an exact tiling must
+    # be found whenever one exists, even where the byte cost model would
+    # prefer a padded plan with fewer HBM re-streams
+    ex = ops.pick_blocks(128, 384, 384, carry=True, require_exact=True)
+    assert ex is not None and ex.exact
+    assert ops.pick_blocks(100, 384, 384, require_exact=True) is None
+    # accounting and planner share one cost model
+    acct = ops.plan_accounting(big, in_bytes=4, out_bytes=4)
+    assert acct["total_bytes"] == big.cost_bytes
+    assert acct["extra_hbm_rd_col"] == acct["extra_hbm_rd_row"] == 0
+
+
+def test_acc_chaining_equals_oneshot(rs):
+    """Two accumulate steps over a split k == one-shot GEMM (C + both
+    checksum directions), bit-for-bit on fp32 storage."""
+    m, k, n = 256, 512, 256
+    a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    plan = ops.pick_blocks(m, k // 2, n, carry=True, vmem_budget=2 * 2**20)
+    st = ops.acc_state_zeros(plan)
+    c0 = jnp.zeros((m, n), jnp.float32)
+    c1, st1, _ = ops.abft_matmul_acc(a[:, : k // 2], b[: k // 2], c0, st,
+                                     plan=plan, backend="pallas")
+    c2, st2, s2 = ops.abft_matmul_acc(a[:, k // 2:], b[k // 2:], c1, st1,
+                                      plan=plan, backend="pallas")
+    wm, wn = _weights(m, n)
+    cs_col, cs_row = ops.reduce_state(st2, m, n)
+    co, colo, rowo = abft_matmul_pallas(
+        a, b, wm, wn, bm=plan.bm, bn=plan.bn, bk=plan.bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(co),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cs_col),
+                               np.asarray(jnp.sum(colo, axis=0)),
+                               rtol=1e-4, atol=k * 1e-4)
+    np.testing.assert_allclose(np.asarray(cs_row),
+                               np.asarray(jnp.sum(rowo, axis=0)),
+                               rtol=1e-4, atol=k * 1e-4)
+    # a clean chain never trips the fused verifier
+    assert float(s2[..., 0].max()) == 0.0
+
+
+@pytest.mark.parametrize("r,c,delta", [
+    (0, 0, 1e4), (383, 511, -3e3), (200, 300, 1e6), (130, 40, 2.5e3),
+    (37, 201, 1e30),
+])
+def test_acc_flip_detected_located_corrected(rs, r, c, delta):
+    """A flipped C element between accumulate steps is detected, located
+    exactly, and repaired in-kernel before the next accumulation."""
+    m, k, n = 384, 256, 512
+    a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    plan = ops.pick_blocks(m, k, n, carry=True, vmem_budget=2 * 2**20)
+    st = ops.acc_state_zeros(plan)
+    c0 = jnp.zeros((m, n), jnp.float32)
+    clean, st1, _ = ops.abft_matmul_acc(a, b, c0, st, plan=plan,
+                                        backend="pallas")
+    bad = clean.at[r, c].add(delta)
+    fixed, _, stats = ops.abft_matmul_acc(
+        jnp.zeros_like(a), jnp.zeros_like(b), bad, st1, plan=plan,
+        backend="pallas")
+    assert float(stats[..., 0].max()) == 1.0   # detected
+    assert float(stats[..., 1].max()) == 1.0   # corrected
+    assert float(jnp.max(stats[..., 2])) == r  # located row
+    assert float(jnp.max(stats[..., 3])) == c  # located col
+    scale = float(jnp.max(jnp.abs(clean)))
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(clean),
+                               rtol=1e-5, atol=1e-4 * scale)
+
+
+def test_acc_flip_correction_is_bit_exact_on_integer_data(rs):
+    """With integer-valued data (fp32 sums exact) the masked-recompute
+    repair restores the flipped element bit-for-bit."""
+    m, k, n = 256, 256, 256
+    a = jnp.asarray(rs.randint(-4, 5, (m, k)), jnp.float32)
+    b = jnp.asarray(rs.randint(-4, 5, (k, n)), jnp.float32)
+    plan = ops.pick_blocks(m, k, n, carry=True, vmem_budget=2 * 2**20)
+    st = ops.acc_state_zeros(plan)
+    clean, st1, _ = ops.abft_matmul_acc(
+        a, b, jnp.zeros((m, n), jnp.float32), st, plan=plan,
+        backend="pallas")
+    bad = clean.at[100, 7].add(2.0 ** 20)
+    fixed, _, stats = ops.abft_matmul_acc(
+        jnp.zeros_like(a), jnp.zeros_like(b), bad, st1, plan=plan,
+        backend="pallas")
+    assert float(stats[..., 1].max()) == 1.0
+    assert bool(jnp.all(fixed == clean))
+
+
+def test_acc_jnp_twin_matches_pallas(rs):
+    """The XLA fallback implements the same semantics as the fused kernel
+    (same detection decision, same repaired output within fp32 noise)."""
+    m, k, n = 256, 256, 384
+    a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    plan = ops.pick_blocks(m, k, n, carry=True, vmem_budget=2 * 2**20)
+    st = ops.acc_state_zeros(plan)
+    c0 = jnp.zeros((m, n), jnp.float32)
+    cP, stP, _ = ops.abft_matmul_acc(a, b, c0, st, plan=plan,
+                                     backend="pallas")
+    bad = cP.at[50, 60].add(4e3)
+    outP, _, sP = ops.abft_matmul_acc(a, b, bad, stP, plan=plan,
+                                      backend="pallas")
+    outJ, _, sJ = ops.abft_matmul_acc(a, b, bad, stP, plan=plan,
+                                      backend="jnp")
+    assert float(sP[..., 1].max()) == float(sJ[..., 1].max()) == 1.0
+    # same per-tile stats layout: located coordinates on the hit tile,
+    # -1 sentinels everywhere else
+    np.testing.assert_array_equal(np.asarray(sP[..., :4]),
+                                  np.asarray(sJ[..., :4]))
+    np.testing.assert_allclose(np.asarray(outP), np.asarray(outJ),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_acc_corrects_one_flip_per_tile_both_backends(rs):
+    """The verify/correct prologue is per-tile: two flips in two different
+    tiles are BOTH repaired, identically on the kernel and its XLA twin."""
+    m, k, n = 256, 256, 256
+    a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    # pin a 2x2 tile grid so the flips land in tiles differing in BOTH dims
+    plan = ops.BlockPlan(m=m, k=k, n=n, bm=128, bn=128, bk=128,
+                         pm=m, pk=k, pn=n, cost_bytes=0)
+    st = ops.acc_state_zeros(plan)
+    clean, st1, _ = ops.abft_matmul_acc(
+        a, b, jnp.zeros((m, n), jnp.float32), st, plan=plan,
+        backend="pallas")
+    bad = clean.at[10, 20].add(5e3).at[200, 200].add(-4e3)
+    for backend in ("pallas", "jnp"):
+        fixed, _, stats = ops.abft_matmul_acc(
+            jnp.zeros_like(a), jnp.zeros_like(b), bad, st1, plan=plan,
+            backend=backend)
+        assert float(jnp.sum(stats[..., 1])) == 2.0, backend
+        locs = {(int(r), int(c)) for r, c in
+                np.asarray(stats[..., 2:4].reshape(-1, 2)) if r >= 0}
+        assert locs == {(10, 20), (200, 200)}, (backend, locs)
+        np.testing.assert_allclose(np.asarray(fixed), np.asarray(clean),
+                                   rtol=1e-5, atol=1e-3, err_msg=backend)
+    # verify=False: no scrub, sentinel stats on both backends
+    for backend in ("pallas", "jnp"):
+        out, _, s0 = ops.abft_matmul_acc(
+            jnp.zeros_like(a), jnp.zeros_like(b), bad, st1, plan=plan,
+            backend=backend, verify=False)
+        assert float(jnp.max(jnp.abs(s0[..., :2]))) == 0.0
+        assert float(jnp.max(s0[..., 2:4])) == -1.0
+        np.testing.assert_allclose(np.asarray(out), np.asarray(bad),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_correct_from_state_scrubs_flip(rs):
+    """The jnp state-scrub (used post-loop by the fused SUMMA path) locates
+    and repairs a flip against a carried per-tile state."""
+    m, n = 256, 384
+    bm, bn = 128, 128
+    c = jnp.asarray(rs.standard_normal((m, n)), jnp.float32)
+    wm, wn = _weights(m, n)
+    state = ops.tile_checksums(c, wm, wn, bm, bn)
+    bad = c.at[171, 333].add(-8e3)
+    fixed, detected, corrected, loc_r, loc_c = ops.correct_from_state(
+        bad, state, wm, wn, bm, bn)
+    assert bool(detected) and bool(corrected)
+    assert (int(loc_r), int(loc_c)) == (171, 333)
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(c),
+                               rtol=1e-5, atol=1e-3)
+    # clean data: no detection, no change
+    same, detected2, _, loc_r2, _ = ops.correct_from_state(
+        c, state, wm, wn, bm, bn)
+    assert not bool(detected2) and int(loc_r2) == -1
+    assert bool(jnp.all(same == c))
+
+
+def test_fused_grad_matches_ref(rs):
+    """The custom VJP of the fused path equals the reference gradient."""
+    a = jnp.asarray(rs.standard_normal((128, 256)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((256, 128)), jnp.float32)
+
+    def loss(fn):
+        def go(x):
+            c, col, row = fn(x)
+            return jnp.sum(c ** 2) + jnp.sum(col) + jnp.sum(row ** 2)
+        return go
+
+    g1 = jax.grad(loss(lambda x: ops.abft_matmul(x, b, force_pallas=True)))(a)
+    g2 = jax.grad(loss(lambda x: ops.abft_matmul(x, b)))(a)
+    scale = float(jnp.max(jnp.abs(g2))) + 1e-30
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-5 * scale)
 
 
 @pytest.mark.parametrize("p,f,m,n", [(4, 1, 128, 128), (8, 2, 256, 128),
@@ -62,14 +301,11 @@ def test_checksum_encode_kernel(rs, p, f, m, n, dtype):
 def test_ops_fallback_matches_kernel(rs):
     a = jnp.asarray(rs.standard_normal((256, 512)), jnp.float32)
     b = jnp.asarray(rs.standard_normal((512, 256)), jnp.float32)
-    c1, cs1 = ops.abft_matmul(a, b, force_pallas=True)
-    c2, cs2 = ops.abft_matmul(a, b, force_pallas=False)
+    c1, col1, row1 = ops.abft_matmul(a, b, force_pallas=True)
+    c2, col2, row2 = ops.abft_matmul(a, b, force_pallas=False)
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
                                rtol=1e-4, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(cs1), np.asarray(cs2),
+    np.testing.assert_allclose(np.asarray(col1), np.asarray(col2),
                                rtol=1e-3, atol=1e-1)
-
-
-def test_block_picker():
-    assert ops.pick_blocks(512, 1024, 512) is not None
-    assert ops.pick_blocks(100, 100, 100) is None  # unaligned -> fallback
+    np.testing.assert_allclose(np.asarray(row1), np.asarray(row2),
+                               rtol=1e-3, atol=1e-1)
