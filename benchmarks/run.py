@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_strong_scaling -> Figure 7
   bench_kernels        -> fused dual-checksum ABFT-matmul kernel accounting
   bench_train_step     -> live train-step ABFT overhead + diskless encode
-  bench_serving        -> continuous-batching throughput, ABFT on/off
+  bench_serving        -> continuous-batching throughput, ABFT on/off,
+                          SDC-drill recovery-latency accounting
   roofline             -> per (arch x shape) roofline terms from the dry-run
 
 ``--json PATH`` additionally writes a machine-readable name -> {us, derived}

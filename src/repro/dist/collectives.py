@@ -140,7 +140,8 @@ def ef_psum_tree(grads, residual, dp_axes, ndp: int, *, wire: str = "psum"):
 
 def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
               tol_factor: float = 256.0,
-              inject: Optional[Tuple[int, float]] = None):
+              inject: Optional[Tuple[int, float]] = None,
+              inject_local=None, with_info: bool = False):
     """psum(x) over `axes` with checksums riding the same collective.
 
     The local contribution is viewed as an R x C grid (R*C >= n,
@@ -156,10 +157,29 @@ def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
     mode: "verify" detects only; "correct" (f >= 2) also repairs a single
     fault.  inject: optional ``(shard, delta)`` — adds `delta` to one
     element of shard `shard`'s contribution AFTER its checksums are taken,
-    simulating a transient fault on the wire (FT drills / tests).
+    simulating a transient fault on the wire (FT drills / tests).  Both
+    components may be traced scalars, so one compiled drill program serves
+    every planned (shard, delta).  ``inject_local`` is the same drill with
+    the shard selection done by the CALLER: a per-shard additive delta
+    (0.0 on unaffected shards), for regions where `lax.axis_index` cannot
+    lower — on the pinned jax 0.4.37 it becomes a PartitionId instruction
+    the SPMD partitioner rejects inside partial-manual shard_map regions,
+    so serve.engine pre-scatters the delta into a model-axis-sharded
+    vector and passes this shard's slice here.
+
+    Runs inside any manual-collective region over `axes` — fully-manual or
+    partial-manual shard_map, or vmap(axis_name=...) in tests.  Pinned-jax
+    caveat (jax 0.4.37): safe in PARTIAL-manual regions because it lowers
+    to a single psum — unlike the gather-family collectives, which abort in
+    the pinned XLA's SPMD partitioner there (see ROADMAP "jax uprev").
 
     Returns ``(y, ok)`` where y = psum(x) (repaired when possible) and ok
-    is a scalar bool (True = checksums consistent, no fault seen).
+    is a scalar bool (True = checksums consistent, no fault seen).  With
+    ``with_info=True`` additionally returns a dict of scalars for FT
+    telemetry (serve.engine drills): ``row``/``col``/``index`` locate the
+    corrupted element in the flattened leaf (-1 = not located),
+    ``magnitude`` is the estimated corruption (the row residual), and
+    ``corrected`` says whether the repair was applied.
     """
     if mode not in ("verify", "correct"):
         raise ValueError(f"unknown mode {mode!r}: expected 'verify' or "
@@ -167,16 +187,24 @@ def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
     if mode == "correct" and f < 2:
         raise ValueError("correct mode needs f >= 2 (row AND column "
                          "checksums locate the fault)")
+    if inject is not None and inject_local is not None:
+        raise ValueError("pass either inject (shard, delta) or inject_local "
+                         "(this shard's delta), not both")
     axes = _axis_tuple(axes)
     shape, dtype = x.shape, x.dtype
     v = x.astype(jnp.float32).reshape(-1)
     n = v.size
+    neg1 = jnp.asarray(-1, jnp.int32)
+    info = {"row": neg1, "col": neg1, "index": neg1,
+            "magnitude": jnp.asarray(0.0, jnp.float32),
+            "corrected": jnp.asarray(False)}
     if n < max(f, 2):
-        if inject is not None:
+        if inject is not None or inject_local is not None:
             raise ValueError(
                 f"cannot inject into a {n}-element leaf: too small to "
                 f"carry {f} checksums (pick a bigger leaf)")
-        return jax.lax.psum(x, axes), jnp.asarray(True)
+        y, ok = jax.lax.psum(x, axes), jnp.asarray(True)
+        return (y, ok, info) if with_info else (y, ok)
     cdim = int(math.ceil(math.sqrt(n)))
     rdim = -(-n // cdim)
     pad = rdim * cdim - n
@@ -192,6 +220,8 @@ def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
         shard, delta = inject
         hit = _linear_axis_index(axes) == shard
         v = v.at[n // 2].add(jnp.where(hit, jnp.float32(delta), 0.0))
+    elif inject_local is not None:
+        v = v.at[n // 2].add(jnp.float32(inject_local))
     packed = jnp.concatenate([v] + checks)
     total = jax.lax.psum(packed, axes)
     y = total[:n]
@@ -206,17 +236,24 @@ def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
         col_res = y2.sum(axis=0) - total[n + rdim:]                # [C]
         col_bad = jnp.max(jnp.abs(col_res)) > tol_factor * rdim * eps * scale
         ok = ok & ~col_bad
+        # single DATA fault: the corrupted element is the intersection of
+        # the offending row and column and the row residual IS the delta.
+        # A fault on a CHECKSUM element trips only ONE family — repairing
+        # then would corrupt healthy data, so require both (the checksum
+        # fault stays detect-only: ok is already False).
+        rr = jnp.argmax(jnp.abs(row_res))
+        cc = jnp.argmax(jnp.abs(col_res))
+        idx = jnp.minimum(rr * cdim + cc, n - 1)
+        located = row_bad & col_bad
+        info["row"] = jnp.where(located, rr.astype(jnp.int32), neg1)
+        info["col"] = jnp.where(located, cc.astype(jnp.int32), neg1)
+        info["index"] = jnp.where(located, idx.astype(jnp.int32), neg1)
+        info["magnitude"] = jnp.where(located, row_res[rr], 0.0)
         if mode == "correct":                                      # f >= 2
-            # single DATA fault: the corrupted element is the intersection
-            # of the offending row and column and the row residual IS the
-            # delta.  A fault on a CHECKSUM element trips only ONE family —
-            # repairing then would corrupt healthy data, so require both
-            # (the checksum fault stays detect-only: ok is already False).
-            rr = jnp.argmax(jnp.abs(row_res))
-            cc = jnp.argmax(jnp.abs(col_res))
-            idx = jnp.minimum(rr * cdim + cc, n - 1)
-            y = jnp.where(row_bad & col_bad, y.at[idx].add(-row_res[rr]), y)
-    return y.reshape(shape).astype(dtype), ok
+            y = jnp.where(located, y.at[idx].add(-row_res[rr]), y)
+            info["corrected"] = located
+    y = y.reshape(shape).astype(dtype)
+    return (y, ok, info) if with_info else (y, ok)
 
 
 def abft_psum_tree(grads, dp_axes, ndp: int, *, mode: str = "verify",
@@ -229,6 +266,13 @@ def abft_psum_tree(grads, dp_axes, ndp: int, *, mode: str = "verify",
     leaf big enough to carry the checksums — tiny leaves skip protection
     entirely, so injecting there would test nothing.
     Returns ``(mean_grads, all_ok)``.
+
+    Opt-in via ``train.step.StepOptions.abft_reduce`` on the deferred-
+    reduction path; pinned-jax caveat: that path's shard_map region also
+    scans over stacked params, which the jax 0.4.37 SPMD partitioner
+    rejects multi-device — the vmap collective semantics and the
+    single-device SPMD path are what tests exercise until the uprev
+    (ROADMAP "jax uprev").
     """
     leaves, treedef = jax.tree.flatten(grads)
     inject_at = None

@@ -54,7 +54,16 @@ _ROW_PARALLEL = {"wo", "down", "out_proj", "wout"}
 
 
 def dp_axes(mesh: Mesh) -> tuple:
-    """All mesh axes that are not the model axis, in mesh order."""
+    """All mesh axes that are not the model axis, in mesh order.
+
+    Everything non-"model" is data-parallel by convention (a multi-pod
+    mesh's leading "pod" axis included), so this tuple is what gradient
+    reductions reduce over and what ZeRO/FSDP shard over.  Pinned-jax
+    caveat: passing these axes as the *manual* axes of a partial-manual
+    shard_map (`axis_names=frozenset(dp_axes(mesh))`) is how train.step
+    defers its gradient reduction, but on jax 0.4.37 such regions reject
+    scan-over-stacked-params, so the defer family is single-device-only
+    until the toolchain uprev (ROADMAP "jax uprev")."""
     return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
 
 
@@ -103,7 +112,9 @@ def batch_specs(mesh: Mesh, global_batch: int) -> tuple:
 
     Shards the batch over the greedy prefix of the DP axes whose cumulative
     extent divides `global_batch`; replicates when nothing divides (e.g.
-    batch-1 long-context decode).
+    batch-1 long-context decode).  Consumers: train.step input specs, the
+    serving engine's decode-slot batch, and `cache_specs` (which falls back
+    to sequence sharding when the batch entry replicates).
     """
     axes = []
     extent = 1
@@ -126,8 +137,14 @@ def infer_param_specs(param_shapes, mesh: Mesh, cfg: Any = None):
     """PartitionSpec tree for a param tree of ShapeDtypeStructs/arrays.
 
     Name-based tensor-parallel rules (column/row split over "model"), with
-    divisibility guards.  `cfg` is accepted for rule refinements that need
-    model metadata; the baseline rules are purely name-driven.
+    divisibility guards: a dim the model extent does not divide stays
+    replicated instead of erroring, so any param tree places on any mesh
+    (the property ckpt.elastic's survivor-mesh restore depends on).  `cfg`
+    is accepted for rule refinements that need model metadata; the baseline
+    rules are purely name-driven.  Row-parallel placements (wo/down/...)
+    make XLA insert the partial-sum all-reduce in auto-sharded code;
+    serve.engine instead lifts its final row-parallel projection into an
+    explicit shard_map region so that reduction can ride `abft_psum`.
     """
     model = _model_extent(mesh)
 
@@ -254,6 +271,13 @@ def cache_specs(mesh: Mesh, global_batch: int, cfg: Any = None):
 
 
 def to_shardings(spec_tree, mesh: Mesh):
-    """PartitionSpec tree -> NamedSharding tree on `mesh`."""
+    """PartitionSpec tree -> NamedSharding tree on `mesh`.
+
+    The bridge from this module's mesh-agnostic specs to the explicit
+    NamedShardings that `jax.jit(in_shardings=...)`/`jax.device_put`
+    consume.  Every sharding in this codebase is an explicit NamedSharding
+    (never ambient-mesh-dependent) — that is what lets `repro.compat`'s
+    `jax.set_mesh` shim be lexical-only on the pinned jax 0.4.37, which has
+    no ambient-mesh concept (see compat.py)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

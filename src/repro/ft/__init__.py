@@ -1,2 +1,18 @@
-from repro.ft.failures import FailureInjector, FailurePlan
-from repro.ft.runtime import FTRuntime, FTPolicy
+"""Fault-tolerance layer: failure/SDC injection plans and the recovery
+runtime.
+
+`ft.failures` simulates the paper's two fault models — process loss
+(erasure: a DP shard's state is gone) and silent data corruption (a bit
+flip that leaves no platform signal) — deterministically or randomized, so
+tests, drills and benchmarks exercise the recovery paths end-to-end.
+`ft.runtime` wraps a training step with the detection -> recovery timeline
+(diskless checksum solve first, disk restore as fallback).  The serving
+analogue lives in `serve.engine`, which drives `SDCInjector` plans through
+its checksum-protected decode collective.
+"""
+from repro.ft.failures import (FailureInjector, FailurePlan, SDCInjector,
+                               SDCPlan, flip_bit)
+from repro.ft.runtime import FTPolicy, FTRuntime
+
+__all__ = ["FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
+           "flip_bit", "FTPolicy", "FTRuntime"]

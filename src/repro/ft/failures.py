@@ -38,6 +38,14 @@ class FailurePlan:
 
 
 class FailureInjector:
+    """Drives a `FailurePlan` through a training loop: `check(step)` fires
+    each planned event exactly once and returns the lost DP shard's index,
+    and `damage(state, shard, leading)` applies the consequence — the
+    shard's slice of every ``[p, ...]``-stacked floating leaf is
+    NaN-poisoned, exactly what a recovery path must repair.  Host-side and
+    framework-agnostic: it never enters compiled code, so plans can fire
+    against any step function (see `ft.runtime.FTRuntime.step`)."""
+
     def __init__(self, plan: FailurePlan):
         self.plan = plan
         self._fired: List[Tuple[int, int]] = []
@@ -100,6 +108,17 @@ class SDCPlan:
 
 
 class SDCInjector:
+    """Drives an `SDCPlan`: `check(step)` fires each planned event once,
+    returning ``(shard, delta)`` for the consumer to thread into a
+    checksum-protected collective — `train.step` passes it to
+    `dist.collectives.abft_psum_tree` via ``StepOptions.sdc_inject``
+    (compile-time static there: one pre-built step per planned event), and
+    `serve.engine` passes it as *traced* scalars to its drill program, so
+    ONE compiled decode variant serves every planned (shard, delta).  The
+    injection lands after the contribution's checksums are taken — a
+    transient fault on the wire, the paper's bit-flip model — and only the
+    riding checksums can see it."""
+
     def __init__(self, plan: SDCPlan):
         self.plan = plan
         self._fired: List[Tuple[int, int]] = []

@@ -31,6 +31,13 @@ __all__ = ["FTPolicy", "FTRuntime"]
 
 @dataclasses.dataclass(frozen=True)
 class FTPolicy:
+    """Recovery-budget knobs for `FTRuntime`.  `diskless_every` sets the
+    checksum-encode cadence (recovery replays zero steps but costs one
+    encode per cadence); `disk_every` the async disk-snapshot cadence (the
+    fallback when more than `f` shards die at once); `f` the simultaneous
+    failures the diskless encoding survives (paper's checksum capacity);
+    `slow_pod_threshold` demotes a pod persistently slower than this
+    multiple of the median step time via the elastic path."""
     diskless_every: int = 10       # encode cadence (steps)
     disk_every: int = 100          # async disk snapshot cadence
     f: int = 1                     # simultaneous failures survivable

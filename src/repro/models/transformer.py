@@ -344,11 +344,15 @@ def _encode_frames(params, frames, cfg: ModelConfig):
 
 def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
             frames=None, img_emb=None, abft=None, remat: bool = False,
-            logits_sharding=None, x_sharding=None):
+            logits_sharding=None, x_sharding=None, return_hidden: bool = False):
     """Train/prefill forward. tokens: [B,S] -> logits [B,S,V] fp32.
 
     frames: [B, n_frames, d_model] (whisper stub input);
     img_emb: [B, n_img_tokens, d_model] (vlm stub input).
+    return_hidden: skip the unembedding and return the post-final-norm
+    hidden state [B,S,D] instead of logits — the serving engine uses this
+    to route the final projection through its own checksum-verified
+    cross-shard reduction (serve.engine).
     """
     b, s = tokens.shape
     if positions is None:
@@ -366,6 +370,8 @@ def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
                                     abft=abft, remat=remat,
                                     x_sharding=x_sharding)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, new_cache, aux
     head = params.get("lm_head")
     if head is None:
         logits = (x.astype(jnp.float32) @
@@ -379,17 +385,21 @@ def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
 
 
 def decode_step(params, token, pos, cache, cfg: ModelConfig, *,
-                img_emb=None, abft=None):
+                img_emb=None, abft=None, return_hidden: bool = False):
     """One-token decode. token: [B,1]; pos: scalar (lockstep batch) or
-    [B] vector (continuous batching: per-slot positions)."""
+    [B] vector (continuous batching: per-slot positions).
+    return_hidden: return the post-final-norm hidden [B,1,D] instead of
+    logits [B,V] (the serving engine's verified-unembed path)."""
     if pos.ndim == 0:
         positions = pos[None]          # shared [1]
     else:
         positions = pos[:, None]       # per-slot [B, 1]
-    logits, new_cache, _ = forward(
+    out, new_cache, _ = forward(
         params, token, cfg, positions=positions, cache=cache,
-        img_emb=img_emb, abft=abft)
-    return logits[:, -1], new_cache
+        img_emb=img_emb, abft=abft, return_hidden=return_hidden)
+    if return_hidden:
+        return out, new_cache          # [B, 1, D]
+    return out[:, -1], new_cache
 
 
 def loss_fn(params, tokens, labels, cfg: ModelConfig, *, frames=None,

@@ -1,1 +1,5 @@
-from repro.serve.engine import Request, ServeEngine
+"""Serving layer: the fault-tolerant distributed continuous-batching engine
+(see serve.engine's module docstring and docs/serving.md)."""
+from repro.serve.engine import EngineStats, Request, SDCEvent, ServeEngine
+
+__all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent"]

@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine with ABFT-verified projections.
+"""Fault-tolerant distributed continuous-batching serving engine.
 
 vLLM-style slot scheduler on top of the framework's decode path:
   * fixed decode batch of `slots`; every engine step decodes ONE token for
@@ -8,26 +8,62 @@ vLLM-style slot scheduler on top of the framework's decode path:
     the resulting KV cache is scattered into the freed slot,
   * the whole engine state (batched caches, per-slot positions) lives in
     fixed-shape device arrays — two compiled programs total (prefill_1,
-    decode_B), no recompilation as requests come and go,
-  * `abft_mode="verify"` carries Huang-Abraham checksum columns through
-    every projection of both programs (silent-corruption detection while
-    serving — the paper's technique in the serving path).
+    decode_B), no recompilation as requests come and go.
+
+Distribution (``mesh=``): both compiled programs shard over a `repro.dist`
+mesh — params via `dist.sharding.infer_param_specs` (Megatron-style
+column/row rules over the "model" axis), KV caches via
+`dist.sharding.cache_specs` (slot batch over the DP axes), tokens/positions
+over the batch entry.  The model body runs auto-sharded exactly like
+`train.step.build_serve_step`; the *final projection* of the decode program
+is restructured into an explicit row-parallel `shard_map` region: each model
+shard computes a partial-logits contribution from its feature slice and the
+cross-shard reduction runs through `dist.collectives.abft_psum` — the
+paper's Huang-Abraham checksums ride the decode path's collective itself.
+
+Fault tolerance while serving:
+  * ``abft_mode="verify"`` carries checksum columns through the projections
+    of both programs (matmul-level SDC detection, core.abft_gemm),
+  * ``abft_reduce="verify"|"correct"`` checksum-protects the decode-path
+    cross-shard logits reduction (collective-level SDC detection/repair).
+    Coverage boundary when BOTH are on: the final projection's local
+    matmul runs unprotected inside the shard_map region (its protection
+    shifts to the collective — checksums are taken of the computed
+    partial, so a fault in that one local accumulator is outside both
+    envelopes); every other projection keeps matmul-level protection,
+  * ``sdc=SDCInjector(...)`` (ft.failures) drills the protected reduction:
+    at planned engine steps a bit-flip-sized delta corrupts one model
+    shard's contribution AFTER its checksums are taken — mid-collective,
+    exactly the paper's transient-fault model — and the engine detects,
+    locates, corrects in-flight and records the event in `EngineStats`
+    (detections, corrections, recovery latency, per-request TTFT / tok/s).
+
+Pinned-jax caveat (0.4.37): the verified-unembed shard_map region is
+partial-manual over {"model"} and contains only a matmul + one psum, which
+lowers everywhere — unlike scan-over-stacked-params or gather-family
+collectives in such regions (see ROADMAP "jax uprev"); the layer scans stay
+in the auto-sharded body for exactly that reason.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.dist.collectives import abft_psum
+from repro.ft.failures import SDCInjector
 from repro.models import transformer as tf
+from repro.models.layers import softcap_fn
 from repro.train.step import StepOptions
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent"]
 
 
 @dataclasses.dataclass
@@ -38,38 +74,185 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # host-side latency timeline (filled by the engine)
+    t_submit: float = 0.0
+    t_first: float = 0.0     # first token available (prefill done)
+    t_done: float = 0.0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time-to-first-token: submit -> prefill's argmax token."""
+        return (self.t_first - self.t_submit) if self.t_first else None
+
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """Decode throughput for this request (tokens after the first)."""
+        n = len(self.output) - 1
+        dt = self.t_done - self.t_first
+        return n / dt if (n > 0 and dt > 0) else None
+
+
+@dataclasses.dataclass
+class SDCEvent:
+    """One fired SDC drill: what was injected and what the engine saw."""
+    step: int                 # engine decode step the fault fired at
+    shard: int                # model-axis shard whose contribution corrupts
+    delta: float              # additive corruption (bit-flip magnitude)
+    detected: bool = False
+    corrected: bool = False
+    row: int = -1             # located grid row/col inside the reduced leaf
+    col: int = -1
+    wall_s: float = 0.0       # wall time of the drilled step
+    recovery_s: float = 0.0   # wall_s minus the mean clean step time
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-engine step/FT accounting, reset by `ServeEngine.reset()`.
+
+    detections/corrections count decode steps whose protected reduction
+    reported an inconsistent / repaired checksum (drilled or not — a real
+    SDC in the wild shows up here identically); `events` holds the fired
+    drills with their located coordinates and recovery latency.
+    """
+    decode_steps: int = 0
+    prefills: int = 0
+    detections: int = 0
+    corrections: int = 0
+    prefill_s: float = 0.0           # total wall time in prefill program
+    decode_s: float = 0.0            # total wall time in decode program
+    decode_step_s: List[float] = dataclasses.field(default_factory=list)
+    drilled_step_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tok_s: List[float] = dataclasses.field(default_factory=list)
+    events: List[SDCEvent] = dataclasses.field(default_factory=list)
+
+    def clean_step_mean_s(self) -> float:
+        xs = self.decode_step_s
+        return sum(xs) / len(xs) if xs else 0.0
+
+    def recovery_latency_s(self) -> float:
+        """Mean extra wall time of detected-drill steps vs clean steps."""
+        rs = [e.recovery_s for e in self.events if e.detected]
+        return sum(rs) / len(rs) if rs else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0  # noqa: E731
+        return {
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "detections": self.detections,
+            "corrections": self.corrections,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "clean_step_ms": 1e3 * self.clean_step_mean_s(),
+            "drilled_step_ms": 1e3 * mean(self.drilled_step_s),
+            "recovery_latency_ms": 1e3 * self.recovery_latency_s(),
+            "ttft_ms": 1e3 * mean(self.ttft_s),
+            "tok_per_s": mean(self.tok_s),
+        }
+
+
+_INFO0 = {"row": -1, "col": -1, "index": -1, "magnitude": 0.0,
+          "corrected": False}
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, abft_mode: str = "off",
-                 abft_backend: str = "auto"):
+                 abft_backend: str = "auto", mesh: Optional[Mesh] = None,
+                 abft_reduce: str = "off", abft_f: int = 2,
+                 sdc: Optional[SDCInjector] = None):
         assert cfg.n_enc_layers == 0, "engine serves decoder-only archs"
+        if abft_reduce not in ("off", "verify", "correct"):
+            raise ValueError(f"unknown abft_reduce {abft_reduce!r}")
+        if sdc is not None and abft_reduce == "off":
+            raise ValueError("sdc drills corrupt the protected logits "
+                             "reduction — set abft_reduce to 'verify' or "
+                             "'correct'")
         self.cfg = cfg
-        self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.abft_reduce = abft_reduce
+        self.abft_f = abft_f
+        self.sdc = sdc
+        self._protected = abft_reduce != "off"
+        self._warming = False
         # abft_backend="pallas" puts every protected projection of both
         # compiled programs (prefill_1, decode_B) on the fused dual-checksum
         # kernel; "auto" does so on TPU (see core.abft_gemm).
         self.abft = StepOptions(abft_mode=abft_mode,
                                 abft_backend=abft_backend).abft
 
-        self.cache = tf.init_cache(cfg, slots, max_len)
-        # force vector per-slot indices (init_cache makes scalars)
-        self.cache = jax.tree_util.tree_map_with_path(
-            lambda p, x: jnp.zeros((x.shape[0], slots), jnp.int32)
-            if (p and getattr(p[-1], "key", None) == "index") else x,
-            self.cache)
-        self.pos = jnp.zeros((slots,), jnp.int32)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        if mesh is None and self._protected:
+            # the protected reduction needs a mesh axis to reduce over; a
+            # 1-device mesh keeps one code path (psum over extent 1) and
+            # still drills detection/correction end-to-end
+            mesh = jax.make_mesh((1, 1), ("data", shd.MODEL_AXIS))
+        self.mesh = mesh
+        if self._protected:
+            m_ext = mesh.shape.get(shd.MODEL_AXIS, 1)
+            if shd.MODEL_AXIS not in mesh.axis_names:
+                raise ValueError(
+                    f"abft_reduce needs a '{shd.MODEL_AXIS}' mesh axis to "
+                    f"reduce over (got axes {mesh.axis_names})")
+            if cfg.d_model % m_ext:
+                raise ValueError(
+                    f"d_model={cfg.d_model} must divide over the model axis "
+                    f"(extent {m_ext}) for the row-parallel verified unembed")
+            if sdc is not None:
+                # an out-of-range shard would be silently dropped by the
+                # delta-vector scatter (jax OOB-scatter semantics) — the
+                # drill would inject nothing and report detected=False
+                bad = [e for e in sdc.plan.events if not 0 <= e[1] < m_ext]
+                if bad:
+                    raise ValueError(
+                        f"SDC plan targets model-axis shards {sorted(e[1] for e in bad)} "
+                        f"but the mesh's model extent is {m_ext}: the drill "
+                        "would inject nothing (shard must be in "
+                        f"[0, {m_ext}))")
+
+        # shardings (identity placement when mesh is None)
+        if mesh is not None:
+            self._param_sh = shd.to_shardings(
+                shd.infer_param_specs(params, mesh, cfg), mesh)
+            self.params = jax.device_put(params, self._param_sh)
+            self._rep = NamedSharding(mesh, P())
+            bentry = shd.batch_specs(mesh, slots)[0]
+            self._tok_sh = NamedSharding(mesh, P(bentry, None))
+            self._pos_sh = NamedSharding(mesh, P(bentry))
+            self._cache_sh = self._cache_shardings(slots)
+        else:
+            self.params = params
+            self._param_sh = self._cache_sh = None
+        self._info_struct = {k: jnp.asarray(v) for k, v in _INFO0.items()}
+
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: Deque[Request] = deque()
-        self._decode = jax.jit(self._decode_impl)
+        self.stats = EngineStats()
+        self.cache = self._fresh_cache()
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+
+        if mesh is not None:
+            in_sh = (self._param_sh, self._tok_sh, self._pos_sh,
+                     self._cache_sh)
+            out_sh = (self._rep, self._cache_sh, self._rep,
+                      {k: self._rep for k in _INFO0})
+            self._decode = jax.jit(self._decode_impl, in_shardings=in_sh,
+                                   out_shardings=out_sh)
+            self._decode_drill = jax.jit(
+                self._drill_impl, in_shardings=in_sh + (self._rep, self._rep),
+                out_shardings=out_sh)
+        else:
+            self._decode = jax.jit(self._decode_impl)
+            self._decode_drill = jax.jit(self._drill_impl)
         self._prefill = {}  # len -> jitted prefill (bucketed)
 
     # -- public ---------------------------------------------------------------
     def submit(self, req: Request):
+        if not req.t_submit:
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -84,30 +267,114 @@ class ServeEngine:
             self._step(finished)
         return finished
 
+    def reset(self):
+        """Clear serving state and stats; compiled programs are kept (the
+        cheap way to reuse a warmed engine across benchmark phases)."""
+        self.cache = self._fresh_cache()
+        self.pos = jnp.zeros((self.slots,), jnp.int32)
+        self.tokens = jnp.zeros((self.slots, 1), jnp.int32)
+        self.active = [None] * self.slots
+        self.queue = deque()
+        self.stats = EngineStats()
+
+    def warm(self, prompt_len: int = 8, decode_steps: int = 2):
+        """Warm BOTH compiled programs (the prefill bucket for `prompt_len`
+        and decode_B) with a single dummy request — plus the drill variant
+        of the decode program (injected delta 0.0 = no corruption) on
+        engines that carry an SDC plan — then reset state and stats."""
+        self._warming = True
+        try:
+            # +1: the prefill's argmax token is output[0], so max_new_tokens
+            # = decode_steps + 1 yields exactly `decode_steps` decode steps
+            self.submit(Request(rid=-1, prompt=[0] * prompt_len,
+                                max_new_tokens=max(decode_steps, 1) + 1))
+            self.run()
+            if self._protected and self.sdc is not None:
+                # only engines with a drill plan can ever invoke the drill
+                # variant — don't compile a second decode program otherwise
+                self._decode_drill(self.params, *self._place(),
+                                   jnp.asarray(0, jnp.int32),
+                                   jnp.asarray(0.0, jnp.float32))
+        finally:
+            self._warming = False
+        self.reset()
+
     # -- internals --------------------------------------------------------------
+    def _place(self):
+        """(tokens, pos, cache) re-placed onto their program shardings.
+
+        Host-side slot bookkeeping (`.at[s].set` scatters, eager argmax
+        outputs) commits these arrays to whatever sharding the eager ops
+        produced; pjit matches input shardings strictly, so re-place before
+        every compiled call (no-op when already placed)."""
+        if self.mesh is None:
+            return self.tokens, self.pos, self.cache
+        return (jax.device_put(self.tokens, self._tok_sh),
+                jax.device_put(self.pos, self._pos_sh),
+                jax.device_put(self.cache, self._cache_sh))
+
+    def _fresh_cache(self):
+        cache = tf.init_cache(self.cfg, self.slots, self.max_len)
+        # force vector per-slot indices (init_cache makes scalars)
+        cache = jax.tree_util.tree_map_with_path(
+            lambda p, x: jnp.zeros((x.shape[0], self.slots), jnp.int32)
+            if (p and getattr(p[-1], "key", None) == "index") else x,
+            cache)
+        if self._cache_sh is not None:
+            cache = jax.device_put(cache, self._cache_sh)
+        return cache
+
+    def _cache_shardings(self, batch: int):
+        shapes = jax.eval_shape(
+            lambda: tf.init_cache(self.cfg, batch, self.max_len))
+        if batch == self.slots:  # engine cache carries VECTOR slot indices
+            shapes = jax.tree_util.tree_map_with_path(
+                lambda p, x: jax.ShapeDtypeStruct((x.shape[0], batch),
+                                                  jnp.int32)
+                if (p and getattr(p[-1], "key", None) == "index") else x,
+                shapes)
+        rule = shd.cache_specs(self.mesh, batch, self.cfg)
+        specs = jax.tree_util.tree_map_with_path(rule, shapes)
+        return shd.to_shardings(specs, self.mesh)
+
     def _bucket(self, n: int) -> int:
         b = 8
         while b < n:
             b *= 2
         return min(b, self.max_len)
 
+    def _get_prefill(self, bucket: int):
+        if bucket not in self._prefill:
+            fn = (lambda pr, tok, ln, _b=bucket:
+                  self._prefill_impl(pr, tok, ln, _b))
+            if self.mesh is not None:
+                small_sh = self._cache_shardings(1)
+                self._prefill[bucket] = jax.jit(
+                    fn, in_shardings=(self._param_sh, self._rep, self._rep),
+                    out_shardings=(self._rep, small_sh))
+            else:
+                self._prefill[bucket] = jax.jit(fn)
+        return self._prefill[bucket]
+
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            t0 = time.perf_counter()
             plen = len(req.prompt)
             bucket = self._bucket(plen)
-            if bucket not in self._prefill:
-                self._prefill[bucket] = jax.jit(
-                    lambda pr, tok, ln, _b=bucket: self._prefill_impl(pr, tok, ln, _b))
             prompt = jnp.zeros((1, bucket), jnp.int32).at[0, :plen].set(
                 jnp.asarray(req.prompt, jnp.int32))
-            logits, small_cache = self._prefill[bucket](
+            logits, small_cache = self._get_prefill(bucket)(
                 self.params, prompt, jnp.asarray(plen, jnp.int32))
             self._scatter_slot(s, small_cache, plen)
             tok = int(jnp.argmax(logits[0, plen - 1]))
+            t1 = time.perf_counter()
             req.output.append(tok)
+            req.t_first = t1
+            self.stats.prefills += 1
+            self.stats.prefill_s += t1 - t0
             self.tokens = self.tokens.at[s, 0].set(tok)
             self.pos = self.pos.at[s].set(plen)
             self.active[s] = req
@@ -129,17 +396,119 @@ class ServeEngine:
         self.cache = jax.tree_util.tree_map_with_path(
             lambda p, b, sm: put(p, b, sm), self.cache, small_cache)
 
+    # -- decode programs -------------------------------------------------------
     def _decode_impl(self, params, tokens, pos, cache):
-        return tf.decode_step(params, tokens, pos, cache, self.cfg,
-                              abft=self.abft)
+        return self._decode_core(params, tokens, pos, cache, None)
 
+    def _drill_impl(self, params, tokens, pos, cache, shard, delta):
+        return self._decode_core(params, tokens, pos, cache, (shard, delta))
+
+    def _decode_core(self, params, tokens, pos, cache, inject):
+        if not self._protected:
+            logits, new_cache = tf.decode_step(params, tokens, pos, cache,
+                                               self.cfg, abft=self.abft)
+            return (logits, new_cache, jnp.asarray(True),
+                    dict(self._info_struct))
+        hidden, new_cache = tf.decode_step(params, tokens, pos, cache,
+                                           self.cfg, abft=self.abft,
+                                           return_hidden=True)
+        logits, ok, info = self._verified_unembed(params, hidden, inject)
+        return logits, new_cache, ok, info
+
+    def _verified_unembed(self, params, x, inject):
+        """Row-parallel final projection with the cross-shard reduction
+        checksum-verified (and drill-injectable) via `abft_psum`.
+
+        x: [B, 1, D] post-final-norm hidden.  Each model shard computes the
+        partial logits of its D/m feature slice; `abft_psum` reduces the
+        partials over the "model" axis with Huang-Abraham checksums riding
+        the SAME collective, detecting (and in "correct" mode repairing) a
+        single corrupted element of the reduction in-flight.
+        """
+        head = params.get("lm_head")
+        w = head["w"] if head is not None else params["embed"]["table"]
+        # lm_head w: [D, V] -> split contraction dim; tied embedding table:
+        # [V, D] -> split feature dim and transpose inside the region
+        wspec = (P(shd.MODEL_AXIS, None) if head is not None
+                 else P(None, shd.MODEL_AXIS))
+        mode, f = self.abft_reduce, self.abft_f
+
+        def local(w_l, x_l, *inj):
+            wl = w_l.astype(jnp.float32)
+            if head is None:
+                wl = wl.T                                  # [D/m, V]
+            part = jnp.einsum("bsd,dv->bsv",
+                              x_l.astype(jnp.float32), wl)
+            # inj, when present, is this shard's [1] slice of the delta
+            # vector — shard selection happened OUTSIDE the region, so no
+            # axis_index is needed (it cannot lower here on jax 0.4.37)
+            return abft_psum(part, (shd.MODEL_AXIS,), f=f, mode=mode,
+                             inject_local=inj[0][0] if inj else None,
+                             with_info=True)
+
+        in_specs = (wspec, P(None, None, shd.MODEL_AXIS))
+        args = (w, x)
+        if inject is not None:
+            shard, delta = inject
+            m_ext = self.mesh.shape[shd.MODEL_AXIS]
+            dvec = jnp.zeros((m_ext,), jnp.float32).at[shard].set(delta)
+            in_specs += (P(shd.MODEL_AXIS),)
+            args += (dvec,)
+        out_specs = (P(None, None, None), P(), {k: P() for k in _INFO0})
+        y, ok, info = jax.shard_map(
+            local, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False, axis_names=frozenset({shd.MODEL_AXIS}))(*args)
+        if head is not None and "b" in head:
+            y = y + head["b"].astype(jnp.float32)
+        y = softcap_fn(y, self.cfg.final_softcap)
+        return y[:, -1], ok, info
+
+    # -- step ------------------------------------------------------------------
     def _step(self, finished: List[Request]):
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.pos, self.cache)
+        t0 = time.perf_counter()
+        ev: Optional[SDCEvent] = None
+        if self.sdc is not None and not self._warming:
+            fired = self.sdc.check(self.stats.decode_steps)
+            if fired is not None:
+                shard, delta = fired
+                ev = SDCEvent(step=self.stats.decode_steps, shard=shard,
+                              delta=delta)
+        tokens, pos, cache = self._place()
+        if ev is not None:
+            logits, self.cache, ok, info = self._decode_drill(
+                self.params, tokens, pos, cache,
+                jnp.asarray(ev.shard, jnp.int32),
+                jnp.asarray(ev.delta, jnp.float32))
+        else:
+            logits, self.cache, ok, info = self._decode(
+                self.params, tokens, pos, cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(next_tok)
+        wall = time.perf_counter() - t0
+
+        detected = self._protected and not bool(ok)
+        self.stats.decode_steps += 1
+        self.stats.decode_s += wall
+        if detected:
+            self.stats.detections += 1
+            if bool(info["corrected"]):
+                self.stats.corrections += 1
+        if ev is not None:
+            ev.detected = detected
+            ev.corrected = bool(info["corrected"])
+            ev.row, ev.col = int(info["row"]), int(info["col"])
+            ev.wall_s = wall
+            base = self.stats.clean_step_mean_s()
+            ev.recovery_s = max(wall - base, 0.0) if base else 0.0
+            self.stats.drilled_step_s.append(wall)
+            self.stats.events.append(ev)
+        else:
+            self.stats.decode_step_s.append(wall)
+
         self.pos = self.pos + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)
         self.tokens = next_tok[:, None]
+        now = time.perf_counter()
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -149,5 +518,10 @@ class ServeEngine:
             if len(req.output) >= req.max_new_tokens or hit_eos \
                     or int(self.pos[s]) >= self.max_len - 1:
                 req.done = True
+                req.t_done = now
+                if req.ttft_s is not None:
+                    self.stats.ttft_s.append(req.ttft_s)
+                if req.decode_tok_s is not None:
+                    self.stats.tok_s.append(req.decode_tok_s)
                 finished.append(req)
                 self.active[s] = None

@@ -118,6 +118,46 @@ def test_abft_psum_corrects_single_bit_flip(rs):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_abft_psum_with_info_locates_the_injected_element(rs):
+    """`with_info=True` exposes the located (row, col, flat index) of the
+    corrupted element plus the estimated magnitude — the telemetry the
+    serving engine's drill records into EngineStats."""
+    x = jnp.asarray(rs.standard_normal((NDP, 6, 7)), jnp.float32)
+    y, ok, info = _vpsum(x, mode="correct", inject=(1, 1e3), with_info=True)
+    assert not bool(ok.any())
+    n = 6 * 7
+    cdim = 7  # ceil(sqrt(42))
+    assert int(info["index"][0]) == n // 2        # inject site is flat n//2
+    assert int(info["row"][0]) == (n // 2) // cdim
+    assert int(info["col"][0]) == (n // 2) % cdim
+    assert bool(info["corrected"].all())
+    np.testing.assert_allclose(float(info["magnitude"][0]), 1e3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x).sum(0),
+                               rtol=1e-4, atol=1e-4)
+    # clean run: nothing located, nothing corrected
+    y2, ok2, info2 = _vpsum(x, mode="correct", with_info=True)
+    assert bool(ok2.all())
+    assert int(info2["index"][0]) == -1
+    assert not bool(info2["corrected"].any())
+
+
+def test_abft_psum_inject_local_matches_inject(rs):
+    """`inject_local` (caller-side shard selection, used where axis_index
+    cannot lower — see serve.engine) must corrupt/correct exactly like the
+    equivalent `inject=(shard, delta)`."""
+    x = jnp.asarray(rs.standard_normal((NDP, 6, 7)), jnp.float32)
+    deltas = jnp.zeros((NDP,), jnp.float32).at[2].set(500.0)
+    y_loc, ok_loc = jax.vmap(
+        lambda v, d: abft_psum(v, ("dp",), mode="correct", inject_local=d),
+        axis_name="dp")(x, deltas)
+    y_ref, ok_ref = _vpsum(x, mode="correct", inject=(2, 500.0))
+    assert not bool(ok_loc.any()) and not bool(ok_ref.any())
+    np.testing.assert_array_equal(np.asarray(y_loc), np.asarray(y_ref))
+    with pytest.raises(ValueError):
+        abft_psum(jnp.zeros((8,)), ("dp",), inject=(0, 1.0),
+                  inject_local=jnp.float32(1.0))
+
+
 def test_abft_psum_tree_means_and_flags(rs):
     g = _per_shard_tree(rs)
     body = jax.vmap(functools.partial(

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Link-check docs against the tree: every repo path or `repro.*` module
+referenced in README.md / docs/*.md must exist, so documented commands and
+pointers cannot rot.  Run from the repo root (CI: docs-and-examples job):
+
+    python tools/check_doc_paths.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+
+# backtick-quoted tokens: `src/repro/core/summa.py`, `repro.dist.collectives`,
+# `docs/serving.md`, `benchmarks/run.py --json`, `core/abft_gemm.py` ...
+TICKED = re.compile(r"`([^`\n]+)`")
+PATHY = re.compile(r"^[\w./-]+\.(py|md|json|ini|txt|yml)$")
+MODULE = re.compile(r"^repro(\.[A-Za-z_][\w]*)+$")
+
+# directories a bare relative path may be anchored at
+ANCHORS = ["", "src/repro/", "src/"]
+
+
+def path_exists(token: str) -> bool:
+    for anchor in ANCHORS:
+        if (ROOT / anchor / token).exists():
+            return True
+    return False
+
+
+def module_exists(dotted: str) -> bool:
+    """repro.a.b.c -> src/repro/a/b/c.py | .../c/__init__.py, trying
+    progressively shorter prefixes (trailing attrs like `.ServeEngine` or
+    `.abft_psum` are fine as long as the module file exists)."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        base = SRC.joinpath(*parts[:end])
+        if base.with_suffix(".py").exists() or (base / "__init__.py").exists():
+            return True
+    return False
+
+
+def check_file(doc: Path) -> list:
+    missing = []
+    for tok in TICKED.findall(doc.read_text()):
+        tok = tok.strip()
+        # strip CLI tails: `benchmarks/run.py --json BENCH.json` -> first word
+        first = tok.split()[0] if tok.split() else tok
+        if PATHY.match(first) and "/" in first:
+            if not path_exists(first):
+                missing.append((doc.name, first))
+        elif MODULE.match(first):
+            if not module_exists(first):
+                missing.append((doc.name, first))
+    return missing
+
+
+def main() -> int:
+    docs = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = []
+    checked = 0
+    for doc in docs:
+        if not doc.exists():
+            missing.append(("<tree>", str(doc.relative_to(ROOT))))
+            continue
+        checked += 1
+        missing += check_file(doc)
+    if missing:
+        print("dangling references:")
+        for doc, tok in missing:
+            print(f"  {doc}: {tok}")
+        return 1
+    print(f"checked {checked} docs: all referenced paths/modules exist")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
