@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_train_step     -> live train-step ABFT overhead + diskless encode
   bench_serving        -> continuous-batching throughput, ABFT on/off,
                           SDC-drill recovery-latency accounting
+  bench_elastic        -> pod-loss shrink/re-grow drill: reshard wall,
+                          bytes moved, recompile time, steps-to-parity
   roofline             -> per (arch x shape) roofline terms from the dry-run
 
 ``--json PATH`` additionally writes a machine-readable name -> {us, derived}
@@ -25,11 +27,12 @@ def main(argv=None) -> None:
                         help="also write rows as JSON {name: {us, derived}}")
     args = parser.parse_args(argv)
 
-    from benchmarks import (bench_kernels, bench_overhead, bench_serving,
-                            bench_strong_scaling, bench_train_step,
-                            bench_weak_scaling, roofline)
+    from benchmarks import (bench_elastic, bench_kernels, bench_overhead,
+                            bench_serving, bench_strong_scaling,
+                            bench_train_step, bench_weak_scaling, roofline)
     mods = [bench_weak_scaling, bench_overhead, bench_strong_scaling,
-            bench_kernels, bench_train_step, bench_serving, roofline]
+            bench_kernels, bench_train_step, bench_serving, bench_elastic,
+            roofline]
     print("name,us_per_call,derived")
     rows = {}
     failed = 0

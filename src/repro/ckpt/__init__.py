@@ -1,3 +1,8 @@
 from repro.ckpt.disk import CheckpointManager
 from repro.ckpt.diskless import DisklessCheckpoint
-from repro.ckpt.elastic import reshard_restore
+from repro.ckpt.elastic import (ReshardPlan, plan_reshard, reshard_restore,
+                                reshard_state, survivor_mesh)
+
+__all__ = ["CheckpointManager", "DisklessCheckpoint", "ReshardPlan",
+           "plan_reshard", "reshard_restore", "reshard_state",
+           "survivor_mesh"]

@@ -91,15 +91,29 @@ class CheckpointManager:
 
     def restore(self, step: int, like, sharding_tree=None):
         """Restore into the structure of `like` (a pytree of arrays or
-        ShapeDtypeStructs).  With `sharding_tree`, leaves are placed sharded."""
+        ShapeDtypeStructs).  With `sharding_tree`, leaves are placed sharded
+        — onto ANY mesh: the stored leaves are global (unsharded) arrays,
+        so the same checkpoint restores onto a different topology (the
+        elastic survivor-mesh path, `ckpt.elastic.reshard_restore`)."""
         path = self.dir / f"step_{step}"
+        if not path.exists():
+            raise FileNotFoundError(
+                f"no checkpoint at step {step} under {self.dir} "
+                f"(have {self.steps()})")
         data = np.load(path / "arrays.npz")
         leaves, treedef = _flatten(like)
+        if len(data.files) != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {len(data.files)} leaves but "
+                f"the restore target has {len(leaves)} — the saved state "
+                "tree and `like` disagree structurally")
         out = []
         for i, ref in enumerate(leaves):
             a = data[f"leaf_{i}"]
-            assert tuple(a.shape) == tuple(ref.shape), (
-                f"leaf {i}: ckpt {a.shape} vs expected {ref.shape}")
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint step {step} leaf {i}: saved shape "
+                    f"{tuple(a.shape)} vs expected {tuple(ref.shape)}")
             out.append(a)
         if sharding_tree is not None:
             sh_leaves = treedef.flatten_up_to(sharding_tree)

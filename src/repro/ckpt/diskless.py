@@ -42,6 +42,7 @@ class DisklessCheckpoint:
     def __init__(self, p: int, f: int = 1, seed: int = 0):
         self.p = p
         self.f = f
+        self._seed = seed
         self.a = checkpoint_matrix(f, p, seed=seed)
         self._enc = None
         self._snapshot = None
@@ -54,7 +55,10 @@ class DisklessCheckpoint:
         On a pod the snapshot is each device's local copy of its own shard
         (device-local memory); here it is the stacked tree."""
         def enc(x):
-            if x.ndim >= 3 and x.shape[0] == self.p:
+            # the fused encode kernel is written for [p, m, n]; higher-rank
+            # leaves (a stacked view of stacked layer groups) take the
+            # generic einsum below
+            if x.ndim == 3 and x.shape[0] == self.p:
                 return ops.checksum_encode(x, self.a)
             if x.ndim >= 1 and x.shape[0] == self.p:
                 flat = x.reshape(self.p, -1)
@@ -94,6 +98,49 @@ class DisklessCheckpoint:
             return jnp.array(snap, copy=True)
 
         return jax.tree.map(fix, self._snapshot, self._enc)
+
+    # -- elastic re-key --------------------------------------------------------
+    def reshard(self, new_p: int,
+                failed: Sequence[int] = ()) -> "DisklessCheckpoint":
+        """Re-key the held checkpoint for a DIFFERENT shard count.
+
+        The elastic path's rung-3a: when a topology change loses at most
+        `f` shards, the diskless state itself survives — recover the lost
+        shards from the checksums, re-split every ``[p, ...]`` leaf to
+        ``[new_p, ...]`` (the global extent must divide), and RE-ENCODE the
+        checksums for the survivor topology.  Returns a new
+        `DisklessCheckpoint(new_p, f)` carrying the re-keyed snapshot +
+        fresh checksums at the same step — zero rollback beyond the encode
+        point, no disk in the loop.  Leaves whose global extent `new_p`
+        does not divide stay unstacked (replicated verbatim, like any odd
+        leaf).  Losses beyond `f` cannot take this path; they fall through
+        to the disk restore in `ckpt.elastic.reshard_restore`.
+        """
+        assert self._snapshot is not None, "no diskless checkpoint taken"
+        state = self.recover(self._snapshot, list(failed)) if failed \
+            else jax.tree.map(lambda x: jnp.array(x, copy=True),
+                              self._snapshot)
+
+        def resplit(x):
+            if x.ndim >= 2 and x.shape[0] == self.p \
+                    and jnp.issubdtype(x.dtype, jnp.floating):
+                glob = x.reshape((self.p * x.shape[1],) + x.shape[2:])
+                if glob.shape[0] % new_p == 0:
+                    return glob.reshape(
+                        (new_p, glob.shape[0] // new_p) + glob.shape[1:])
+                return glob
+            return x
+
+        fresh = DisklessCheckpoint(new_p, self.f, seed=self._seed)
+        fresh.encode(jax.tree.map(resplit, state), step=self._step)
+        return fresh
+
+    def snapshot(self):
+        """A COPY of the held encode-point state (stacked ``[p, ...]``
+        view) — the elastic runtime materializes this after `reshard` to
+        resume from the re-keyed checkpoint without a disk round trip."""
+        assert self._snapshot is not None, "no diskless checkpoint taken"
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), self._snapshot)
 
     @property
     def step(self):

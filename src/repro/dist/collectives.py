@@ -33,7 +33,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ef_psum_tree", "abft_psum", "abft_psum_tree"]
+__all__ = ["ef_psum_tree", "abft_psum", "abft_psum_tree", "ef_wire_bytes"]
 
 
 def _axis_tuple(axes):
@@ -256,15 +256,29 @@ def abft_psum(x, axes, *, f: int = 2, mode: str = "correct",
     return (y, ok, info) if with_info else (y, ok)
 
 
+def _normalize_events(inject):
+    """``inject`` may be one (shard, delta) pair or a sequence of them."""
+    if inject is None:
+        return ()
+    if isinstance(inject, (tuple, list)) and len(inject) == 2 \
+            and not isinstance(inject[0], (tuple, list)):
+        return (tuple(inject),)
+    return tuple(tuple(ev) for ev in inject)
+
+
 def abft_psum_tree(grads, dp_axes, ndp: int, *, mode: str = "verify",
-                   f: int = 2, inject: Optional[Tuple[int, float]] = None):
+                   f: int = 2, inject=None):
     """Checksum-verified DP gradient mean over a pytree.
 
     Applies `abft_psum` leaf-wise (one protected collective per leaf, like
     the pmean it replaces) and divides by `ndp` to match `jax.lax.pmean`
-    semantics.  `inject` corrupts ONE leaf (single-fault model): the first
-    leaf big enough to carry the checksums — tiny leaves skip protection
-    entirely, so injecting there would test nothing.
+    semantics.  `inject` takes one ``(shard, delta)`` event or a SEQUENCE
+    of them — the multi-collective fault model: event j corrupts the j-th
+    leaf big enough to carry the checksums, so k events land in k
+    *different* protected reductions of the same step (tiny leaves skip
+    protection entirely, so injecting there would test nothing).  Each
+    reduction still carries at most the single fault its own checksums can
+    locate and correct exactly.
     Returns ``(mean_grads, all_ok)``.
 
     Opt-in via ``train.step.StepOptions.abft_reduce`` on the deferred-
@@ -275,17 +289,54 @@ def abft_psum_tree(grads, dp_axes, ndp: int, *, mode: str = "verify",
     (ROADMAP "jax uprev").
     """
     leaves, treedef = jax.tree.flatten(grads)
-    inject_at = None
-    if inject is not None:
-        inject_at = next((i for i, g in enumerate(leaves)
-                          if g.size >= max(f, 2)), None)
-        if inject_at is None:
-            raise ValueError("no leaf large enough to carry an injection")
+    events = _normalize_events(inject)
+    inject_for = {}
+    if events:
+        eligible = [i for i, g in enumerate(leaves) if g.size >= max(f, 2)]
+        if len(eligible) < len(events):
+            raise ValueError(
+                f"{len(events)} injected events need as many leaves large "
+                f"enough to carry checksums; only {len(eligible)} qualify")
+        inject_for = dict(zip(eligible, events))
     outs, oks = [], []
     for i, g in enumerate(leaves):
         y, ok = abft_psum(g, dp_axes, f=f, mode=mode,
-                          inject=inject if i == inject_at else None)
+                          inject=inject_for.get(i))
         outs.append(y / ndp)
         oks.append(ok)
     all_ok = jnp.stack(oks).all() if oks else jnp.asarray(True)
     return jax.tree.unflatten(treedef, outs), all_ok
+
+
+# ---------------------------------------------------------------------------
+# wire-byte accounting (roofline inputs — no compilation involved)
+# ---------------------------------------------------------------------------
+
+
+def ef_wire_bytes(param_shapes, ndp: int) -> dict:
+    """Per-device gradient-reduction wire bytes: fp32 ring all-reduce vs the
+    int8-EF compressed exchange (`ef_psum_tree(wire="int8")`).
+
+    The fp32 baseline is a bandwidth-optimal ring all-reduce: each device
+    sends ``2 * S * (ndp-1)/ndp`` bytes for an ``S``-byte fp32 payload
+    (reduce-scatter + all-gather phases).  The int8 exchange sends the same
+    two phases at 1 byte/element (all_to_all of the quantized shards +
+    all_gather of the requantized segments) plus one fp32 scale per leaf
+    per phase — the ~4x the ROADMAP's roofline tables want visible.  Used
+    by `launch.dryrun` to annotate train cells without compiling the
+    int8 path (the pinned XLA cannot lower it multi-device; see
+    `ef_psum_tree`).
+    """
+    leaves = jax.tree.leaves(param_shapes)
+    n_elems = sum(int(math.prod(x.shape)) for x in leaves)
+    n_leaves = len(leaves)
+    frac = (ndp - 1) / ndp if ndp > 1 else 0.0
+    f32 = 2 * 4 * n_elems * frac
+    int8 = 2 * 1 * n_elems * frac + 2 * 4 * n_leaves * frac
+    return {
+        "ndp": ndp,
+        "grad_elems": n_elems,
+        "f32_ring_bytes_per_device": f32,
+        "int8_ef_bytes_per_device": int8,
+        "saving": (f32 / int8) if int8 else 1.0,
+    }

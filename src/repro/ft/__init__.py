@@ -12,7 +12,9 @@ its checksum-protected decode collective.
 """
 from repro.ft.failures import (FailureInjector, FailurePlan, SDCInjector,
                                SDCPlan, flip_bit)
-from repro.ft.runtime import FTPolicy, FTRuntime
+from repro.ft.runtime import (ElasticReport, ElasticRuntime, FTPolicy,
+                              FTRuntime, MeshGeneration)
 
 __all__ = ["FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
-           "flip_bit", "FTPolicy", "FTRuntime"]
+           "flip_bit", "FTPolicy", "FTRuntime", "ElasticRuntime",
+           "ElasticReport", "MeshGeneration"]

@@ -81,21 +81,23 @@ class FailureInjector:
 class SDCPlan:
     """Deterministic SDC schedule: at step s, shard i's contribution to the
     gradient reduction is corrupted by `delta` (a flipped high mantissa /
-    exponent bit shows up as a large additive error)."""
+    exponent bit shows up as a large additive error).
+
+    A step may carry SEVERAL events — two bit flips landing in two different
+    reductions of the same compiled step (the multi-collective fault model).
+    `events_at(step)` groups them; `SDCInjector.check_all` delivers them."""
     events: Tuple[Tuple[int, int, float], ...]   # (step, dp_shard, delta)
 
-    def __post_init__(self):
-        steps = [s for (s, _, _) in self.events]
-        if len(steps) != len(set(steps)):
-            raise ValueError(
-                "SDCPlan allows one event per step (the injector fires "
-                f"once per step): duplicate steps in {steps}")
+    def events_at(self, step: int) -> Tuple[Tuple[int, float], ...]:
+        """All (shard, delta) payloads planned for `step`, in plan order."""
+        return tuple((i, d) for (s, i, d) in self.events if s == step)
 
     @classmethod
     def random(cls, n_events: int, max_step: int, p: int, seed: int = 0,
                magnitude: float = 1e3):
-        """At most one event per step (SDCInjector fires once per step, so
-        same-step collisions would silently never execute)."""
+        """Random in time and location (§4.3 stress mode) with at most one
+        event per step, so each drill step carries exactly one fault — the
+        multi-fault-per-step case is built deliberately, not sampled."""
         rng = np.random.RandomState(seed)
         n_events = min(n_events, max_step - 1)
         steps = rng.choice(np.arange(1, max_step), size=n_events,
@@ -121,15 +123,30 @@ class SDCInjector:
 
     def __init__(self, plan: SDCPlan):
         self.plan = plan
-        self._fired: List[Tuple[int, int]] = []
+        self._fired: List[Tuple[int, int, float]] = []
 
     def check(self, step: int) -> Optional[Tuple[int, float]]:
-        """Returns (shard, delta) if an SDC event fires at `step`."""
+        """Returns (shard, delta) if an SDC event fires at `step` — the
+        single-fault consumer API (fires one event per call; a plan with
+        several same-step events hands them out one call at a time)."""
         for (s, i, d) in self.plan.events:
-            if s == step and (s, i) not in self._fired:
-                self._fired.append((s, i))
+            if s == step and (s, i, d) not in self._fired:
+                self._fired.append((s, i, d))
                 return i, d
         return None
+
+    def check_all(self, step: int) -> Tuple[Tuple[int, float], ...]:
+        """Fire and return EVERY unfired event planned for `step` — the
+        multi-collective fault model: each payload lands in a different
+        protected reduction of the same compiled step (see
+        `dist.collectives.abft_psum_tree(inject=...)` which spreads a
+        sequence of events over distinct leaves)."""
+        out = []
+        for (s, i, d) in self.plan.events:
+            if s == step and (s, i, d) not in self._fired:
+                self._fired.append((s, i, d))
+                out.append((i, d))
+        return tuple(out)
 
 
 def flip_bit(x, flat_index: int, bit: int = 30):

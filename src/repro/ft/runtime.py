@@ -1,13 +1,35 @@
-"""Fault-tolerant training runtime: the paper's recovery timeline (§3.3) as a
-training-loop wrapper.
+"""Fault-tolerant training runtimes: the paper's recovery timeline (§3.3) as
+a training-loop wrapper, grown into an elastic runtime that survives
+*topology* loss, not just shard loss.
 
-Per step:  T_detection (injector / platform signal) -> recovery path choice:
-  1. diskless  — lost DP shard rebuilt from the rotated checksum shards
-                 (T_checksum, the psum/solve; zero steps lost since the last
-                 diskless encode),
-  2. disk      — restore the latest disk checkpoint (steps since it replay),
-  3. elastic   — re-mesh onto survivors + disk restore (hardware actually
-                 gone; see ckpt.elastic).
+The recovery LADDER, cheapest rung first (each rung handles what the one
+below cannot):
+
+  1. **in-step ABFT** — silent corruption inside a step is detected,
+     located and corrected by the checksums fused into the matmuls
+     (`core.abft_gemm`, `kernels.abft_matmul`) and riding the gradient
+     collective (`dist.collectives.abft_psum`); zero rollback, the step
+     simply completes with the repaired values (compiled into every
+     generation via `StepOptions.abft_mode` / `abft_reduce`).
+  2. **diskless rollback** — a lost DP shard on an unchanged topology is
+     rebuilt from the rotated checksum shards (`ckpt.diskless`); bounded
+     rollback to the last encode, no disk.
+  3. **elastic reshard** — the hardware is actually gone (pod loss): build
+     a survivor mesh, re-place params AND ZeRO-1 opt state through the
+     mesh-agnostic `train.step.state_specs`, re-split the global batch
+     (`data.pipeline.resplit` — sample order unchanged), recompile, and
+     resume; the mirror operation re-grows when the pod returns.  Rung 3a
+     reuses the surviving diskless state when the loss fits its capacity
+     (`DisklessCheckpoint.reshard`), rung 3b restores from disk
+     (`ckpt.elastic.reshard_restore`).
+
+`FTRuntime` wraps rungs 1-2 around a caller-built step function (the
+original runtime, kept as-is for single-topology loops).  `ElasticRuntime`
+OWNS the step: it builds and versions a `MeshGeneration` — mesh +
+shardings + compiled step + data split + diskless/disk cadence as one
+bundle — and switches generations on `lose_pod()` / `regrow()`, logging an
+`ElasticReport` (placement diff, bytes moved, reshard wall, recompile
+time) per switch.
 
 Straggler mitigation: synchronous SPMD has no per-step laggards to chase —
 the mitigation is (a) the diskless encode cadence bounds recovery work,
@@ -18,15 +40,18 @@ is prefetched off the critical path (data.pipeline).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.ckpt.diskless import DisklessCheckpoint
 from repro.ft.failures import FailureInjector, SDCInjector
 
-__all__ = ["FTPolicy", "FTRuntime"]
+__all__ = ["FTPolicy", "FTRuntime", "ElasticRuntime", "MeshGeneration",
+           "ElasticReport", "stack_view", "unstack_view"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +67,27 @@ class FTPolicy:
     disk_every: int = 100          # async disk snapshot cadence
     f: int = 1                     # simultaneous failures survivable
     slow_pod_threshold: float = 3.0  # x median step time -> demote pod
+
+
+def stack_view(state, p: int):
+    """View each float leaf as [p, ...] by splitting its leading dim when
+    divisible (single-host stand-in for the DP stacking the diskless
+    protocol checksums over)."""
+    def stack(x):
+        if x.ndim >= 1 and x.shape[0] % p == 0 and jnp.issubdtype(
+                x.dtype, jnp.floating):
+            return x.reshape((p, x.shape[0] // p) + x.shape[1:])
+        return x
+    return jax.tree.map(stack, state)
+
+
+def unstack_view(stacked, like):
+    """Inverse of `stack_view` against the reference shapes in `like`."""
+    def unstack(x, ref):
+        if x.shape != ref.shape:
+            return x.reshape(ref.shape)
+        return x
+    return jax.tree.map(unstack, stacked, like)
 
 
 class FTRuntime:
@@ -71,31 +117,34 @@ class FTRuntime:
              run_step_sdc: Optional[Callable] = None):
         """Run one training step with failure check + recovery.
 
-        `run_step_sdc(state, (shard, delta))` runs a step variant with an
-        SDC injection + `abft_reduce` protection (train.step.StepOptions):
+        `run_step_sdc(state, events)` runs a step variant with an SDC
+        injection + `abft_reduce` protection (train.step.StepOptions):
         when the SDC plan fires at this step the corrupted variant runs and
         the ABFT checksum riding the gradient psum repairs the reduction
-        in-flight (counted under recoveries["sdc"]).  The fired event is
+        in-flight (counted under recoveries["sdc"]).  `events` is the
+        fired ``(shard, delta)`` payload — or a TUPLE of payloads when the
+        plan schedules several faults for one step (each lands in a
+        different protected reduction; see `SDCPlan`/`abft_psum_tree`) —
         passed through so the drill can select/parameterize the injected
         step (injection location is compile-time static in StepOptions, so
-        a drill pre-builds one step per planned (shard, delta)).
+        a drill pre-builds one step per planned event set).
         """
         t0 = time.time()
         failed = self.injector.check(step_idx) if self.injector else None
         if failed is not None:
             state = FailureInjector.damage(state, failed, self.p)
             state = self.recover(state, [failed])
-        # only consume an SDC event when there is a handler to drive it —
-        # otherwise the event stays planned instead of silently vanishing
-        sdc = (self.sdc_injector.check(step_idx)
+        # only consume SDC events when there is a handler to drive them —
+        # otherwise the events stay planned instead of silently vanishing
+        sdc = (self.sdc_injector.check_all(step_idx)
                if self.sdc_injector is not None and run_step_sdc is not None
-               else None)
-        if sdc is not None:
+               else ())
+        if sdc:
             # counts SDC drills DRIVEN (injection reached the reduction);
             # whether it was merely detected or also repaired is the step's
             # abft_reduce mode, visible in metrics["abft_ok"]
             self.recoveries["sdc"] += 1
-            out = run_step_sdc(state, sdc)
+            out = run_step_sdc(state, sdc[0] if len(sdc) == 1 else sdc)
         else:
             out = run_step(state)
         self.step_times.append(time.time() - t0)
@@ -113,3 +162,314 @@ class FTRuntime:
         raise RuntimeError(
             f"unrecoverable: {len(failed)} failures, capacity f="
             f"{self.policy.f}, no disk checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime: versioned mesh generations + the full ladder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MeshGeneration:
+    """One versioned bundle: everything a topology needs to take a step.
+
+    Rebuilt (or fetched from the executable cache) on every elastic
+    transition; nothing outside the bundle depends on the mesh shape, so
+    switching generations IS the topology change."""
+    gen: int                    # monotonically increasing generation id
+    mesh: jax.sharding.Mesh
+    step_fn: Callable           # AOT-compiled (state, batch) -> (state, metrics)
+    in_shardings: Tuple         # (state shardings, batch shardings)
+    out_shardings: Tuple
+    state_shapes: dict          # eval_shape of the state tree (mesh-agnostic)
+    dp_extent: int              # product of the non-"model" axis sizes
+    split: int                  # data-pipeline split (batch-dividing DP extent)
+    build_s: float              # python build (specs, tracers) wall
+    compile_s: float            # lower+compile wall (0.0 when cache-reused)
+    reused: bool = False        # executable came from the generation cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticReport:
+    """What one elastic transition did and what it cost — the placement
+    diff summary (`ckpt.elastic.plan_reshard`) plus measured walls."""
+    kind: str                   # "shrink" | "regrow"
+    gen_from: int
+    gen_to: int
+    mesh_from: dict
+    mesh_to: dict
+    restore_path: str           # "diskless" (rung 3a) | "disk" (3b) | "live"
+    rollback_step: Optional[int]
+    n_leaves: int
+    n_respecced: int
+    bytes_total: int
+    bytes_respecced: int
+    reshard_wall_s: float
+    build_s: float
+    compile_s: float
+    reused_executable: bool
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ElasticRuntime(FTRuntime):
+    """Owns mesh generations and executes the three-rung recovery ladder.
+
+    Unlike `FTRuntime` (which wraps a caller-built step), this runtime
+    BUILDS the step per topology: construction compiles generation 0 on
+    `mesh`; `lose_pod()` shrinks onto the survivor mesh (rung 3) and
+    `regrow()` returns to the full mesh when the pod comes back.  Rungs
+    1-2 ride along unchanged — rung 1 is compiled into every generation
+    via `opts`, rung 2 is `maybe_shard_failure` (diskless-first).
+
+    Determinism contract (what the parity drills assert): the data stream
+    is global and (seed, step)-deterministic, checkpoints hold global
+    arrays, and shardings are mesh-agnostic functions of the state — so a
+    drilled shrink resumes bit-identically to a survivor-mesh-from-scratch
+    restore of the same checkpoint.
+    """
+
+    def __init__(self, cfg, shape, mesh, *, adamw=None, opts=None,
+                 policy: Optional[FTPolicy] = None, data_cfg=None,
+                 ckpt_manager=None, injector=None, sdc_injector=None):
+        from repro.data.pipeline import DataConfig, DataPipeline
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.step import StepOptions
+
+        self.cfg = cfg
+        self.shape = shape
+        self.adamw = adamw or AdamWConfig()
+        self.opts = opts or StepOptions()
+        self.full_mesh = mesh
+        self._next_gen = 0
+        self._gen_cache = {}       # mesh-shape key -> MeshGeneration
+        self.reports = []
+        gen = self._build_generation(mesh)
+        super().__init__(gen.dp_extent, policy or FTPolicy(),
+                         injector=injector, ckpt_manager=ckpt_manager,
+                         sdc_injector=sdc_injector)
+        self.gen = gen
+        self.recoveries["elastic"] = 0
+        self.data_cfg = data_cfg or DataConfig(
+            cfg.vocab_size, shape.seq_len, shape.global_batch)
+        self.pipe = DataPipeline(self.data_cfg, split=gen.split)
+
+    # -- generation lifecycle ------------------------------------------------
+
+    def _build_generation(self, mesh) -> MeshGeneration:
+        """Build (or cache-fetch) the full bundle for `mesh`.
+
+        The executable cache is keyed on the mesh SHAPE: re-growing onto a
+        previously seen topology reuses its compiled step (the production
+        move — the old executable was never discarded), so only
+        first-contact topologies pay the recompile."""
+        from repro.dist import sharding as shd
+        from repro.train.step import (build_train_step, init_state,
+                                      make_inputs)
+
+        key = tuple(mesh.shape.items())
+        cached = self._gen_cache.get(key)
+        if cached is not None:
+            gen = dataclasses.replace(
+                cached, gen=self._next_gen, compile_s=0.0, reused=True)
+            self._next_gen += 1
+            return gen
+
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            fn, in_sh, out_sh = build_train_step(
+                self.cfg, mesh, self.shape, self.adamw, self.opts)
+            state_shapes = jax.eval_shape(
+                functools.partial(init_state, cfg=self.cfg, opts=self.opts,
+                                  mesh=mesh),
+                jax.random.PRNGKey(0))
+            build_s = time.time() - t0
+            t1 = time.time()
+            compiled = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(0,)).lower(
+                    state_shapes, make_inputs(self.cfg, self.shape)).compile()
+            compile_s = time.time() - t1
+
+        bspec = shd.batch_specs(mesh, self.shape.global_batch)[0]
+        split = shd._entry_extent(mesh, bspec)
+        dp_extent = 1
+        for a in shd.dp_axes(mesh):
+            dp_extent *= mesh.shape[a]
+        gen = MeshGeneration(
+            gen=self._next_gen, mesh=mesh, step_fn=compiled,
+            in_shardings=in_sh, out_shardings=out_sh,
+            state_shapes=state_shapes, dp_extent=dp_extent, split=split,
+            build_s=build_s, compile_s=compile_s)
+        self._next_gen += 1
+        self._gen_cache[key] = gen
+        return gen
+
+    def init_state(self, seed: int = 0):
+        """Fresh state placed onto the current generation's shardings."""
+        from repro.train.step import init_state
+        with jax.set_mesh(self.gen.mesh):
+            state = init_state(jax.random.PRNGKey(seed), self.cfg, self.opts,
+                               self.gen.mesh)
+            return jax.device_put(state, self.gen.in_shardings[0])
+
+    # -- the step + cadence --------------------------------------------------
+
+    def place_batch(self, step: int):
+        """The deterministic global batch for `step`, placed for the
+        current generation (same stream regardless of topology)."""
+        return jax.device_put(
+            {k: jnp.asarray(v) for k, v in self.pipe.batch_at(step).items()},
+            self.gen.in_shardings[1])
+
+    def train_step(self, step_idx: int, state):
+        """Run step `step_idx` under the current generation."""
+        batch = self.place_batch(step_idx)
+        t0 = time.time()
+        state, metrics = self.gen.step_fn(state, batch)
+        self.step_times.append(time.time() - t0)
+        return state, metrics
+
+    def checkpoint(self, step: int, state):
+        """Cadenced rung-2/3 state capture: diskless over the stacked view,
+        disk over the GLOBAL state (elastic restore needs global leaves).
+        The saved data state carries THIS step as its cursor — the runtime
+        fetches batches by step (`pipe.batch_at`), so the pipeline's own
+        prefetch cursor is not the resume point."""
+        if step % self.policy.diskless_every == 0:
+            self.diskless.encode(stack_view(state, self.p), step)
+        if self.ckpt is not None and step % self.policy.disk_every == 0:
+            self.ckpt.save(step, state, aux={
+                "data_step": step,
+                "data": dict(self.pipe.state_dict(), step=step),
+                "gen": self.gen.gen, "mesh": dict(self.gen.mesh.shape)})
+
+    # -- rung 2: same-topology shard loss ------------------------------------
+
+    def maybe_shard_failure(self, step: int, state):
+        """Drive the `FailureInjector` through rung 2.  Returns
+        ``(state, rollback_step or None)``; on a hit the state is the
+        recovered ENCODE-point state and the caller replays from
+        `rollback_step` (the deterministic pipeline makes replay exact).
+        Diskless-first; disk fallback restores the GLOBAL state this
+        runtime's `checkpoint` saves (not the stacked view)."""
+        failed = self.injector.check(step) if self.injector else None
+        if failed is None:
+            return state, None
+        if self.diskless.step is not None and 1 <= self.policy.f:
+            stacked = FailureInjector.damage(stack_view(state, self.p),
+                                             failed, self.p)
+            self.recoveries["diskless"] += 1
+            stacked = self.diskless.recover(stacked, [failed])
+            state = unstack_view(stacked, state)
+            rollback = self.diskless.step
+        elif self.ckpt is not None and self.ckpt.latest_step() is not None:
+            self.recoveries["disk"] += 1
+            rollback = self.ckpt.latest_step()
+            state = self.ckpt.restore(rollback, self.gen.state_shapes)
+        else:
+            raise RuntimeError(
+                "shard loss with no diskless encode and no disk checkpoint")
+        return jax.device_put(state, self.gen.in_shardings[0]), rollback
+
+    # -- rung 3: topology change ---------------------------------------------
+
+    def _switch(self, gen: MeshGeneration, at_step: Optional[int]):
+        self.gen = gen
+        self.p = gen.dp_extent
+        self.pipe = self.pipe.resplit(gen.split, at_step=at_step)
+
+    def lose_pod(self, state, failed_pods: int = 1):
+        """Rung 3: a pod is gone.  Shrink onto the survivor mesh.
+
+        Returns ``(state_on_survivors, rollback_step, report)``.  Restore
+        path: rung 3a when the dead pod's slice of the diskless stacking
+        fits the checksum capacity `f` (state survives in memory, zero
+        rollback past the encode point); rung 3b otherwise (latest disk
+        checkpoint through `ckpt.elastic.reshard_restore`).
+        """
+        from repro.ckpt.elastic import (plan_reshard, reshard_restore,
+                                        reshard_state, survivor_mesh)
+
+        old = self.gen
+        new_mesh = survivor_mesh(failed_pods=failed_pods, mesh=old.mesh)
+        gen = self._build_generation(new_mesh)
+        plan = plan_reshard(old.state_shapes, old.mesh, new_mesh,
+                            self.opts, self.cfg)
+        lost_shards = self.p * failed_pods // old.mesh.shape["pod"]
+        t0 = time.time()
+        if self.diskless.step is not None and lost_shards <= self.policy.f:
+            # 3a: recover the dead pod's shards from the checksums and
+            # re-encode for the survivor extent — no disk in the loop
+            rollback = self.diskless.step
+            failed = list(range(self.p - lost_shards, self.p))
+            self.diskless = self.diskless.reshard(gen.dp_extent,
+                                                  failed=failed)
+            restored = unstack_view(self.diskless.snapshot(), state)
+            state = reshard_state(restored, new_mesh, self.opts, self.cfg)
+            path = "diskless"
+        else:
+            if self.ckpt is not None:
+                self.ckpt.wait()          # flush the in-flight async save
+            if self.ckpt is None or self.ckpt.latest_step() is None:
+                raise RuntimeError(
+                    f"pod loss beyond diskless capacity (lost {lost_shards} "
+                    f"shards > f={self.policy.f}) and no disk checkpoint")
+            rollback = self.ckpt.latest_step()
+            state = reshard_restore(self.ckpt, rollback, old.state_shapes,
+                                    new_mesh, self.opts, self.cfg)
+            self.diskless = DisklessCheckpoint(gen.dp_extent, self.policy.f)
+            path = "disk"
+        reshard_wall = time.time() - t0
+        self._switch(gen, at_step=rollback)
+        self.recoveries["elastic"] += 1
+        report = ElasticReport(
+            kind="shrink", gen_from=old.gen, gen_to=gen.gen,
+            mesh_from=dict(old.mesh.shape), mesh_to=dict(gen.mesh.shape),
+            restore_path=path, rollback_step=rollback,
+            n_leaves=len(plan.leaves), n_respecced=plan.n_respecced,
+            bytes_total=plan.bytes_total,
+            bytes_respecced=plan.bytes_respecced,
+            reshard_wall_s=reshard_wall, build_s=gen.build_s,
+            compile_s=gen.compile_s, reused_executable=gen.reused)
+        self.reports.append(report)
+        return state, rollback, report
+
+    def regrow(self, state, mesh=None, at_step: Optional[int] = None):
+        """The pod returns: spread the LIVE survivor state back over the
+        full mesh (or `mesh`).  Nothing was lost, so no rollback — the
+        diskless checkpoint is re-keyed across the grow to keep its
+        recovery point.  Pass `at_step` (the step about to run) so the
+        re-split pipeline's cursor is the resumption point rather than
+        its prefetch position.  Returns ``(state_on_full_mesh, report)``."""
+        from repro.ckpt.elastic import plan_reshard, reshard_state
+
+        old = self.gen
+        new_mesh = mesh if mesh is not None else self.full_mesh
+        gen = self._build_generation(new_mesh)
+        plan = plan_reshard(old.state_shapes, old.mesh, new_mesh,
+                            self.opts, self.cfg)
+        t0 = time.time()
+        state = reshard_state(state, new_mesh, self.opts, self.cfg)
+        reshard_wall = time.time() - t0
+        if self.diskless.step is not None:
+            self.diskless = self.diskless.reshard(gen.dp_extent)
+        else:
+            self.diskless = DisklessCheckpoint(gen.dp_extent, self.policy.f)
+        self._switch(gen, at_step=at_step)
+        self.recoveries["elastic"] += 1
+        report = ElasticReport(
+            kind="regrow", gen_from=old.gen, gen_to=gen.gen,
+            mesh_from=dict(old.mesh.shape), mesh_to=dict(gen.mesh.shape),
+            restore_path="live", rollback_step=None,
+            n_leaves=len(plan.leaves), n_respecced=plan.n_respecced,
+            bytes_total=plan.bytes_total,
+            bytes_respecced=plan.bytes_respecced,
+            reshard_wall_s=reshard_wall, build_s=gen.build_s,
+            compile_s=gen.compile_s, reused_executable=gen.reused)
+        self.reports.append(report)
+        return state, report
+
+    def close(self):
+        self.pipe.close()

@@ -122,6 +122,25 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, opts=None, verbose=True,
         from repro.launch.hlo_accounting import account
         acct = account(hlo)
 
+        grad_wire = None
+        if shape.kind == "train":
+            # gradient-reduction wire accounting: fp32 ring all-reduce vs
+            # the int8-EF exchange (`dist.collectives.ef_psum_tree`,
+            # wire="int8").  Analytic, not compiled — the pinned XLA cannot
+            # lower the int8 collectives multi-device (ROADMAP "jax
+            # uprev"), but the wire bytes are a pure function of the param
+            # tree and the DP extent, so the 4x shows up in the roofline
+            # tables either way.
+            from repro.dist import sharding as shd
+            from repro.dist.collectives import ef_wire_bytes
+            from repro.models import transformer as tf
+            ndp = 1
+            for a in shd.dp_axes(mesh):
+                ndp *= mesh.shape[a]
+            pshapes = jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                                     jax.random.PRNGKey(0))
+            grad_wire = ef_wire_bytes(pshapes, ndp)
+
     n_dev = 1
     for v in mesh.shape.values():
         n_dev *= v
@@ -148,6 +167,8 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, opts=None, verbose=True,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
     }
+    if grad_wire is not None:
+        record["grad_wire"] = grad_wire
     if verbose:
         peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)

@@ -1,4 +1,4 @@
-"""End-to-end training driver.
+"""End-to-end training driver + the pod-loss drill CLI.
 
 Single-host (CPU) it trains a reduced config for real; on a pod the same
 driver runs the full config — the mesh/topology is the only difference.
@@ -10,11 +10,26 @@ flag), and resume.
 Usage (CPU example):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --steps 200 --batch 16 --seq 128 --inject-failures 3
+
+Pod-loss drill (`ft.runtime.ElasticRuntime` end-to-end: shrink onto the
+survivor mesh at step N, resume, re-grow at step M, then verify
+step-for-step loss parity against a survivor-mesh-from-scratch restore;
+needs enough host devices for the drill mesh):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.train --arch qwen2-0.5b --steps 10 --batch 8 \
+      --seq 32 --drill-mesh 2x2x2 --kill-pod-at-step 4 --regrow-at-step 7 \
+      --drill-json drill.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import shutil
+import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +40,8 @@ from repro.data.pipeline import DataConfig, DataPipeline
 from repro.data.pipeline import synthetic_batch as synthetic
 from repro.ckpt.disk import CheckpointManager
 from repro.ft.failures import FailureInjector, FailurePlan
-from repro.ft.runtime import FTPolicy, FTRuntime
+from repro.ft.runtime import (ElasticRuntime, FTPolicy, FTRuntime,
+                              stack_view, unstack_view)
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import StepOptions, build_train_step, init_state, make_inputs
 
@@ -110,23 +126,187 @@ def run(arch: str, *, smoke: bool = True, steps: int = 100, batch: int = 16,
         return losses
 
 
-def _stack_view(state, p):
-    """View each float leaf as [p, ...] by splitting its leading dim when
-    divisible (single-host stand-in for the DP stacking)."""
-    def stack(x):
-        if x.ndim >= 1 and x.shape[0] % p == 0 and jnp.issubdtype(
-                x.dtype, jnp.floating):
-            return x.reshape((p, x.shape[0] // p) + x.shape[1:])
-        return x
-    return jax.tree.map(stack, state)
+# stacked DP views moved to ft.runtime (shared with ElasticRuntime); kept
+# as module aliases for callers of the original driver API
+_stack_view = stack_view
+_unstack_view = unstack_view
 
 
-def _unstack_view(stacked, like):
-    def unstack(x, ref):
-        if x.shape != ref.shape:
-            return x.reshape(ref.shape)
-        return x
-    return jax.tree.map(unstack, stacked, like)
+# ---------------------------------------------------------------------------
+# pod-loss drill: shrink -> resume -> re-grow, with a parity reference
+# ---------------------------------------------------------------------------
+
+
+def run_elastic_drill(arch: str = "qwen2-0.5b", *, steps: int = 10,
+                      kill_pod_at: int = 4, regrow_at: int = None,
+                      batch: int = 8, seq: int = 32,
+                      mesh_shape=(2, 2, 2), lr: float = 1e-3, seed: int = 0,
+                      ckpt_dir: str = None, diskless_every: int = 1,
+                      disk_every: int = 1, verbose: bool = True) -> dict:
+    """Drive `ElasticRuntime` through the ROADMAP's pod-loss drill.
+
+    Timeline: train on the full ``(pod, data, model)`` mesh; at step
+    `kill_pod_at` a pod dies -> rung 3 shrinks onto the survivor mesh
+    (rollback to the latest checkpoint, reshard params + ZeRO-1 opt state,
+    re-split the batch, recompile) and replays forward; at `regrow_at`
+    the pod returns -> re-grow onto the full mesh, no rollback.
+
+    Afterwards a REFERENCE run builds the survivor mesh from scratch,
+    restores the same disk checkpoint at the rollback step, and replays
+    the post-shrink window — the drilled run must match it step-for-step
+    (bit-identical restored params, equal losses).  Returns a
+    JSON-serializable report: losses of both runs, the parity result, and
+    the elastic transition costs (reshard wall, bytes moved, recompile
+    time) for BENCH_PR4.json.
+    """
+    n_needed = math.prod(mesh_shape)
+    if len(jax.devices()) < n_needed:
+        raise RuntimeError(
+            f"drill mesh {mesh_shape} needs {n_needed} devices, have "
+            f"{len(jax.devices())} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_needed} before "
+            "importing jax")
+    assert kill_pod_at >= 1, "need at least one checkpointed step pre-kill"
+    cfg = smoke_config(arch)
+    shape = ShapeConfig("drill", seq, batch, "train")
+    adamw = AdamWConfig(lr=lr, total_steps=steps,
+                        warmup_steps=max(steps // 10, 1))
+    opts = StepOptions(remat=False)
+    policy = FTPolicy(diskless_every=diskless_every, disk_every=disk_every)
+    tmp = None
+    if ckpt_dir is None:
+        tmp = tempfile.TemporaryDirectory()
+        ckpt_dir = tmp.name
+
+    mesh = jax.make_mesh(tuple(mesh_shape), ("pod", "data", "model"))
+    # keep every step: the parity reference re-restores the rollback ckpt
+    rt = ElasticRuntime(cfg, shape, mesh, adamw=adamw, opts=opts,
+                        policy=policy,
+                        ckpt_manager=CheckpointManager(ckpt_dir,
+                                                       keep=steps + 1))
+    state = rt.init_state(seed)
+    losses = {}
+    killed = regrown = False
+    rollback = None
+    shrink_rep = regrow_rep = None
+    post_shrink_host = None
+    t_start = time.time()
+    i = 0
+    while i < steps:
+        if not killed and i == kill_pod_at:
+            rt.ckpt.wait()        # the async save for step i-1 must land
+            state, rollback, shrink_rep = rt.lose_pod(state)
+            killed = True
+            # preserve the PRE-KILL rollback checkpoint: the replay below
+            # re-saves the same steps (overwriting them with post-restore
+            # state), and the parity reference must restore bits the
+            # drilled run cannot have rewritten — otherwise a restore bug
+            # would be persisted and mirrored, and the rung-3a solve error
+            # would compare the restored state with itself
+            src = Path(ckpt_dir) / f"step_{rollback}"
+            if not src.exists():
+                raise RuntimeError(
+                    f"no disk checkpoint at rollback step {rollback} for "
+                    "the parity reference (set disk_every=1 for drills)")
+            ref_dir = Path(ckpt_dir) / "ref"
+            shutil.copytree(src, ref_dir / f"step_{rollback}",
+                            dirs_exist_ok=True)
+            if verbose:
+                print(f"[drill] step {i}: pod lost -> "
+                      f"{shrink_rep.mesh_to} via {shrink_rep.restore_path}, "
+                      f"rollback to {rollback}, "
+                      f"reshard {shrink_rep.reshard_wall_s*1e3:.0f}ms, "
+                      f"compile {shrink_rep.compile_s:.1f}s")
+            post_shrink_host = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), state)
+            i = rollback          # deterministic pipeline replays exactly
+            continue
+        if killed and not regrown and regrow_at is not None \
+                and i == regrow_at:
+            state, regrow_rep = rt.regrow(state, at_step=i)
+            regrown = True
+            if verbose:
+                print(f"[drill] step {i}: pod returned -> "
+                      f"{regrow_rep.mesh_to} "
+                      f"(reshard {regrow_rep.reshard_wall_s*1e3:.0f}ms, "
+                      f"executable "
+                      f"{'reused' if regrow_rep.reused_executable else 'recompiled'})")
+        rt.checkpoint(i, state)
+        state, m = rt.train_step(i, state)
+        losses[i] = float(m["loss"])
+        if verbose and i % max(steps // 10, 1) == 0:
+            print(f"[drill] step {i:4d} loss={losses[i]:.4f} "
+                  f"mesh={dict(rt.gen.mesh.shape)}")
+        i += 1
+    drill_wall = time.time() - t_start
+    rt.ckpt.wait()
+    rt.close()
+
+    # ---- reference: survivor mesh FROM SCRATCH, restored at the same step
+    parity_end = regrow_at if regrown else steps
+    ref_losses = {}
+    params_bitwise_equal = None
+    params_max_abs_diff = None
+    if killed:
+        from repro.ckpt.elastic import reshard_restore
+        ref_mesh = jax.make_mesh(
+            tuple(shrink_rep.mesh_to.values()),
+            tuple(shrink_rep.mesh_to.keys()))
+        ref_rt = ElasticRuntime(cfg, shape, ref_mesh, adamw=adamw,
+                                opts=opts, policy=policy)
+        manager = CheckpointManager(str(Path(ckpt_dir) / "ref"))
+        ref_state = reshard_restore(manager, rollback,
+                                    ref_rt.gen.state_shapes, ref_mesh,
+                                    opts, cfg)
+        if post_shrink_host is not None:
+            ref_host = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), ref_state)
+            pairs = list(zip(jax.tree.leaves(post_shrink_host),
+                             jax.tree.leaves(ref_host)))
+            params_bitwise_equal = all(
+                np.array_equal(a, b, equal_nan=True) for a, b in pairs)
+            # rung 3a restores via the checksum SOLVE (float arithmetic):
+            # near-exact, not bit-exact — quantify instead of just flagging
+            params_max_abs_diff = float(max(
+                np.max(np.abs(a.astype(np.float64) - b.astype(np.float64)))
+                if a.size else 0.0 for a, b in pairs))
+        for j in range(rollback, parity_end):
+            ref_state, m = ref_rt.train_step(j, ref_state)
+            ref_losses[j] = float(m["loss"])
+        ref_rt.close()
+
+    window = [k for k in sorted(ref_losses) if k in losses]
+    diffs = [abs(losses[k] - ref_losses[k]) for k in window]
+    max_diff = max(diffs) if diffs else None
+    report = {
+        "arch": arch, "mesh": list(mesh_shape),
+        "survivor_mesh": shrink_rep.mesh_to if shrink_rep else None,
+        "steps": steps, "kill_pod_at": kill_pod_at, "regrow_at": regrow_at,
+        "rollback_step": rollback,
+        "losses": {str(k): v for k, v in sorted(losses.items())},
+        "ref_losses": {str(k): v for k, v in sorted(ref_losses.items())},
+        "parity": {
+            "window": [rollback, parity_end] if killed else None,
+            "steps_compared": len(window),
+            "max_abs_loss_diff": max_diff,
+            "loss_parity": (max_diff is not None and max_diff == 0.0),
+            "params_bitwise_equal": params_bitwise_equal,
+            "params_max_abs_diff": params_max_abs_diff,
+        },
+        "shrink": shrink_rep.summary() if shrink_rep else None,
+        "regrow": regrow_rep.summary() if regrow_rep else None,
+        "recoveries": rt.recoveries,
+        "drill_wall_s": drill_wall,
+    }
+    if verbose:
+        p = report["parity"]
+        print(f"[drill] parity over steps {p['window']}: "
+              f"{p['steps_compared']} compared, "
+              f"max |dloss|={p['max_abs_loss_diff']}, "
+              f"params bit-identical={p['params_bitwise_equal']}")
+    if tmp is not None:
+        tmp.cleanup()
+    return report
 
 
 def main():
@@ -143,7 +323,27 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
+    # elastic drill flags (ft.runtime.ElasticRuntime end-to-end)
+    ap.add_argument("--kill-pod-at-step", type=int, default=None,
+                    help="run the pod-loss drill: lose a pod at this step")
+    ap.add_argument("--regrow-at-step", type=int, default=None,
+                    help="re-grow onto the full mesh at this step")
+    ap.add_argument("--drill-mesh", default="2x2x2",
+                    help="drill mesh PxDxM (needs P*D*M host devices)")
+    ap.add_argument("--drill-json", default=None,
+                    help="write the drill report JSON here")
     args = ap.parse_args()
+    if args.kill_pod_at_step is not None:
+        mesh_shape = tuple(int(x) for x in args.drill_mesh.split("x"))
+        report = run_elastic_drill(
+            args.arch, steps=args.steps, kill_pod_at=args.kill_pod_at_step,
+            regrow_at=args.regrow_at_step, batch=args.batch, seq=args.seq,
+            mesh_shape=mesh_shape, lr=args.lr, ckpt_dir=args.ckpt_dir)
+        if args.drill_json:
+            with open(args.drill_json, "w") as fh:
+                json.dump(report, fh, indent=1)
+            print(f"[drill] report -> {args.drill_json}")
+        return
     run(args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
         seq=args.seq, microbatches=args.microbatches, abft_mode=args.abft,
         inject_failures=args.inject_failures, ckpt_dir=args.ckpt_dir,

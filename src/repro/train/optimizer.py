@@ -14,7 +14,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "adamw_opt_specs",
+           "global_norm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,37 @@ def adamw_init(params):
         "v": jax.tree.map(zeros, params),
         "count": jnp.zeros((), jnp.int32),
     }
+
+
+def adamw_opt_specs(param_specs, param_shapes=None, mesh=None,
+                    zero1: bool = False):
+    """PartitionSpec tree for `adamw_init`'s state, mirroring its structure.
+
+    The OPTIMIZER owns the mapping from param placement to opt-state
+    placement (m/v inherit the param spec, count replicates), so consumers
+    — `train.step.state_specs` and, through it, `ckpt.elastic`'s
+    survivor-mesh re-placement — never hardcode this optimizer's state
+    shape.  With ``zero1=True`` (needs `param_shapes` + `mesh`), m/v are
+    additionally sharded over the DP axes along their ZeRO dim
+    (`dist.sharding.zero1_spec`), which is what makes the ZeRO-1 schedule
+    and the elastic restore mesh-shape-agnostic end to end: the same
+    checkpointed opt state re-places onto any mesh whose extents divide.
+    Pass ``zero1=False`` when `param_specs` already carry their DP
+    sharding (FSDP) — m/v then simply inherit it.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if zero1:
+        assert param_shapes is not None and mesh is not None, \
+            "zero1 opt specs need param_shapes and mesh"
+        from repro.dist import sharding as shd
+        opt_p = jax.tree.map(
+            lambda s, sh: shd.zero1_spec(s, sh.shape, mesh),
+            param_specs, param_shapes,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        opt_p = param_specs
+    return {"m": opt_p, "v": opt_p, "count": P()}
 
 
 def global_norm(tree):

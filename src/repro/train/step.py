@@ -23,7 +23,8 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.abft_gemm import ABFTConfig
 from repro.dist import sharding as shd
 from repro.models import transformer as tf
-from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_opt_specs,
+                                   adamw_update)
 
 __all__ = ["StepOptions", "build_train_step", "build_serve_step",
            "build_prefill_step", "make_inputs", "init_state"]
@@ -73,7 +74,9 @@ class StepOptions:
     # FT drill hook: (dp_shard, delta) corrupts one gradient element of that
     # shard's contribution DURING the reduction (after its checksum is
     # taken) — lets ft.runtime exercise detection/correction end-to-end.
-    sdc_inject: Optional[Tuple[int, float]] = None
+    # Also accepts a TUPLE of such pairs: event j then lands in the j-th
+    # protected reduction of the step (multi-collective fault drills).
+    sdc_inject: Optional[Tuple] = None
 
     @property
     def remat_arg(self):
@@ -159,6 +162,13 @@ def init_state(key, cfg: ModelConfig, opts: StepOptions, mesh: Mesh = None):
 
 
 def state_specs(state_shapes, mesh: Mesh, opts: StepOptions, cfg=None):
+    """Mesh-agnostic PartitionSpec tree for a whole train state.
+
+    Param rules come from `dist.sharding`, optimizer-state rules from the
+    optimizer itself (`adamw_opt_specs`) — no layer hardcodes another's
+    state structure, which is what lets `ckpt.elastic` re-place params AND
+    ZeRO-1 opt state onto a survivor mesh with one call.
+    """
     pspecs = shd.infer_param_specs(state_shapes["params"], mesh, cfg)
     if opts.fsdp:
         # params themselves carry the DP sharding (weights all-gather at
@@ -168,17 +178,13 @@ def state_specs(state_shapes, mesh: Mesh, opts: StepOptions, cfg=None):
             lambda path, s: shd.zero1_spec(
                 s, _lookup(state_shapes["params"], path).shape, mesh),
             pspecs)
-        opt_p = pspecs
-    elif opts.zero1:
-        opt_p = jax.tree_util.tree_map_with_path(
-            lambda path, s: shd.zero1_spec(
-                s, _lookup(state_shapes["params"], path).shape, mesh),
-            pspecs)
+        opt = adamw_opt_specs(pspecs)
     else:
-        opt_p = pspecs
+        opt = adamw_opt_specs(pspecs, state_shapes["params"], mesh,
+                              zero1=opts.zero1)
     out = {
         "params": pspecs,
-        "opt": {"m": opt_p, "v": opt_p, "count": P()},
+        "opt": opt,
         "step": P(),
     }
     if "ef_residual" in state_shapes:
@@ -349,6 +355,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                 loss = jax.lax.pmean(loss, dp)
                 # ONE checksum-protected reduction (the paper's technique
                 # applied to the grad collective, not just the matmuls)
+                # single pair or a sequence of events — abft_psum_tree's
+                # normalizer is the one place that distinction is resolved
                 grads, ok = abft_psum_tree(
                     grads, dp, ndp, mode=opts.abft_reduce,
                     inject=opts.sdc_inject)

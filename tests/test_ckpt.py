@@ -44,7 +44,7 @@ def test_restore_shape_mismatch_raises(tmp_path):
     bad_like = {"params": {"w": jax.ShapeDtypeStruct((2, 2), jnp.float32),
                            "b": jax.ShapeDtypeStruct((3,), jnp.float32)},
                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         mgr.restore(0, bad_like)
 
 

@@ -1,5 +1,9 @@
-"""Data pipeline: determinism, resume, prefetch."""
+"""Data pipeline: determinism, resume (+config validation), prefetch, and
+the elastic re-split."""
+import dataclasses
+
 import numpy as np
+import pytest
 
 from repro.data.pipeline import DataConfig, DataPipeline, synthetic_batch
 
@@ -40,6 +44,61 @@ def test_pipeline_matches_direct_and_resumes():
     pipe2.close()
     np.testing.assert_array_equal(b["tokens"],
                                   synthetic_batch(cfg, state["step"])["tokens"])
+
+
+def test_resume_validates_config_drift():
+    """Silent shape drift between save and resume must fail loudly: a
+    checkpointed cursor replays a DIFFERENT stream if seq_len/vocab/batch/
+    seed/zipf changed under it."""
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=1)
+    pipe = DataPipeline(cfg)
+    state = pipe.state_dict()
+    pipe.close()
+    for drift in ({"seq_len": 16}, {"vocab_size": 50},
+                  {"global_batch": 8}, {"seed": 2}, {"zipf_a": 1.5}):
+        with pytest.raises(ValueError):
+            DataPipeline.resume(dataclasses.replace(cfg, **drift), state)
+    # prefetch is a host-side knob — NOT stream-critical, resumes fine
+    pipe2 = DataPipeline.resume(dataclasses.replace(cfg, prefetch=4), state)
+    pipe2.close()
+
+
+def test_resume_legacy_state_checks_seed():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=1)
+    legacy = {"step": 3, "seed": 2}               # pre-split state dict
+    with pytest.raises(ValueError):
+        DataPipeline.resume(cfg, legacy)
+    pipe = DataPipeline.resume(dataclasses.replace(cfg, seed=2), legacy)
+    assert pipe.split == 1
+    pipe.close()
+
+
+def test_resplit_preserves_stream_and_checkpoints():
+    """The elastic contract: re-splitting the global batch over a different
+    DP extent changes NOTHING about the sample stream, and the split
+    extent round-trips through state_dict/resume."""
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8, seed=3)
+    pipe = DataPipeline(cfg, split=4)
+    assert pipe.local_batch == 2
+    before = pipe.batch_at(5)
+    pipe2 = pipe.resplit(2, at_step=5)            # pod lost: 4 -> 2 shards
+    assert pipe2.split == 2 and pipe2.local_batch == 4
+    np.testing.assert_array_equal(pipe2.batch_at(5)["tokens"],
+                                  before["tokens"])
+    state = pipe2.state_dict()
+    assert state["split"] == 2 and state["step"] == 5
+    pipe3 = DataPipeline.resume(cfg, state)       # split is checkpointable
+    assert pipe3.split == 2
+    np.testing.assert_array_equal(next(pipe3)["tokens"],
+                                  synthetic_batch(cfg, 5)["tokens"])
+    pipe2.close()
+    pipe3.close()
+
+
+def test_split_must_divide_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+    with pytest.raises(ValueError):
+        DataPipeline(cfg, split=3)
 
 
 def test_zipf_heavy_tail():

@@ -72,6 +72,42 @@ def test_memory_overhead_shrinks_with_p():
     assert DisklessCheckpoint(256, 1).memory_overhead() < 0.004
 
 
+def test_reshard_onto_smaller_p(rs):
+    """Elastic rung 3a: the checkpoint re-keys for a smaller shard count —
+    failed shards (<= f) are recovered from the checksums, every leaf is
+    re-split to the survivor extent, and checksums are RE-ENCODED so the
+    new topology can itself lose f shards and recover."""
+    p, new_p = 4, 2
+    dc = DisklessCheckpoint(p, f=1)
+    state = _stacked_state(rs, p)
+    dc.encode(state, step=7)
+    dc2 = dc.reshard(new_p, failed=[3])     # shard 3 died with its pod
+    assert dc2.p == new_p and dc2.step == 7
+    # the re-keyed snapshot holds the SAME global state, re-split
+    glob = np.asarray(state["w"]).reshape(-1, 16)
+    np.testing.assert_allclose(
+        np.asarray(dc2.snapshot()["w"]).reshape(-1, 16), glob,
+        rtol=1e-5, atol=1e-5)
+    # and the survivor topology is itself recoverable (fresh checksums)
+    damaged = FailureInjector.damage(dc2.snapshot(), 1, new_p)
+    rec = dc2.recover(damaged, [1])
+    np.testing.assert_allclose(np.asarray(rec["w"]).reshape(-1, 16), glob,
+                               rtol=1e-4, atol=1e-4)
+    assert int(rec["count"]) == 3           # odd leaves ride along verbatim
+
+
+def test_reshard_without_failures_is_exact(rs):
+    """A planned re-grow re-keys with no losses: pure re-split, bit-exact."""
+    p = 2
+    dc = DisklessCheckpoint(p, f=1)
+    state = _stacked_state(rs, p)
+    dc.encode(state, step=3)
+    dc2 = dc.reshard(4)
+    np.testing.assert_array_equal(
+        np.asarray(dc2.snapshot()["w"]).reshape(-1, 16),
+        np.asarray(state["w"]).reshape(-1, 16))
+
+
 def test_snapshot_survives_donation(rs):
     """The snapshot must own its buffers (donation-safety)."""
     p = 4
