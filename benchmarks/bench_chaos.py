@@ -1,0 +1,63 @@
+"""Chaos-campaign smoke rows: the single-device FaultSpace swept end-to-end.
+
+Runs `repro.chaos.campaign.CampaignRunner` over `FaultSpace.smoke()` (six
+fault classes, both workloads, no pod axis needed) and emits one row per
+classified event plus the campaign-level coverage counters.  The counters
+are the contract the full CI campaign gates on — `missed_protected` and
+`false_alarms` must be 0 here too, so a regression in any protection
+domain's detection path shows up in every bench run, not only in the
+8-device chaos-campaign job.
+
+Rows:
+  chaos/<event-name>          us = event wall, derived = outcome
+  chaos/recovery/<rung>       us = measured recovery latency for that rung
+  chaos/specs | corrected | detected | missed_unprotected |
+  chaos/missed_protected | false_alarms | uncovered_surfaces
+"""
+
+
+def run():
+    import time
+
+    from repro.chaos.campaign import CampaignRunner
+    from repro.chaos.faults import FaultSpace
+    from repro.chaos.report import summarize
+
+    t0 = time.time()
+    res = CampaignRunner(FaultSpace.smoke()).run()
+    wall = time.time() - t0
+    rows = []
+    for ev in res.results:
+        rows.append((f"chaos/{ev.name}", round(ev.wall_s * 1e6, 1),
+                     f"outcome={ev.outcome}"))
+        if ev.recovery_latency_s is not None and ev.rung:
+            rows.append((f"chaos/recovery/{ev.workload}:{ev.rung}",
+                         round(ev.recovery_latency_s * 1e6, 1),
+                         f"rung latency ({ev.kind})"))
+    summ = summarize(res.results)
+    o = summ["by_outcome"]
+    n_missed_prot = len(summ["missed_in_protected_domains"])
+    n_fa = len(summ["false_alarms"])
+    from repro.chaos.faults import uncovered_surfaces
+    rows += [
+        ("chaos/specs", round(wall * 1e6, 1),
+         f"{summ['n_fault_kinds']} fault kinds over "
+         f"{'+'.join(summ['workloads'])}"),
+        ("chaos/corrected", o["corrected"], "faults detected AND repaired "
+         "within the domain promise"),
+        ("chaos/detected", o["detected"], "faults seen but (by design) not "
+         "repaired"),
+        ("chaos/missed_unprotected", o["missed"],
+         "faults into ledger surfaces — honest misses"),
+        ("chaos/missed_protected", n_missed_prot,
+         "MUST BE 0: a protected domain let a fault through"),
+        ("chaos/false_alarms", n_fa,
+         "MUST BE 0: detections on clean sweeps"),
+        ("chaos/uncovered_surfaces", len(uncovered_surfaces()),
+         "registered surfaces with no protection (the ledger)"),
+    ]
+    if n_missed_prot or n_fa:
+        raise AssertionError(
+            f"chaos gate: missed_protected={n_missed_prot} "
+            f"false_alarms={n_fa} — {summ}")
+    return rows

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           SDC-drill recovery-latency accounting
   bench_elastic        -> pod-loss shrink/re-grow drill: reshard wall,
                           bytes moved, recompile time, steps-to-parity
+  bench_chaos          -> single-device chaos-campaign sweep: per-event
+                          outcomes + coverage counters (missed_protected
+                          and false_alarms must be 0)
   roofline             -> per (arch x shape) roofline terms from the dry-run
 
 ``--json PATH`` additionally writes a machine-readable name -> {us, derived}
@@ -27,12 +30,13 @@ def main(argv=None) -> None:
                         help="also write rows as JSON {name: {us, derived}}")
     args = parser.parse_args(argv)
 
-    from benchmarks import (bench_elastic, bench_kernels, bench_overhead,
-                            bench_serving, bench_strong_scaling,
-                            bench_train_step, bench_weak_scaling, roofline)
+    from benchmarks import (bench_chaos, bench_elastic, bench_kernels,
+                            bench_overhead, bench_serving,
+                            bench_strong_scaling, bench_train_step,
+                            bench_weak_scaling, roofline)
     mods = [bench_weak_scaling, bench_overhead, bench_strong_scaling,
             bench_kernels, bench_train_step, bench_serving, bench_elastic,
-            roofline]
+            bench_chaos, roofline]
     print("name,us_per_call,derived")
     rows = {}
     failed = 0

@@ -1,0 +1,911 @@
+"""Campaign runner: sweep a `FaultSpace` over live train + serve workloads.
+
+For every `FaultSpec` the runner builds the real workload — an
+`ft.runtime.ElasticRuntime` training loop or a drilled
+`serve.engine.ServeEngine` decode — injects exactly that fault through the
+spec's adapter (`SDCPlan` into the protected collective, `FailurePlan`
+into the shard-erasure path, `lose_pod()`/`demote_pod()` for topology
+faults, `flip_bit` for DRAM corruption), and classifies what happened:
+
+  * **corrected**   — the domain detected the fault AND the end state
+    honors its promise vs a clean golden run (bit-identity where promised,
+    tolerance where the repair is a float solve),
+  * **detected**    — seen but not (fully) repaired, e.g. a flip in the
+    kernel's carried *checksum* state (repairing would corrupt healthy
+    data, so the kernel deliberately only flags it),
+  * **missed**      — the fault ran to completion with no detector firing;
+    the REQUIRED outcome for faults aimed at unprotected surfaces (the
+    uncovered ledger), and a red flag inside a protected domain,
+  * **false_alarm** — a detector fired on a clean run (every golden run
+    doubles as a clean sweep and is reported as a row of its own).
+
+Golden runs are cached per workload configuration and compared against the
+fault runs leaf-by-leaf on the host (`bit_identical` / `within_tol` /
+`diverged` + the measured max |diff|).  Every corrected/detected event
+records which recovery rung fired (`abft_inflight`, `diskless`,
+`elastic:diskless`, `elastic:disk`, `demote:*`) and its measured latency.
+
+Multi-pod faults need a ``(pod, data, model)`` mesh (8 host devices for
+the default 2x2x2); with fewer devices those specs are reported as
+``skipped`` — visible in the artifact, never silently dropped.  The
+train-side SDC drill runs on a single-device mesh because the pinned XLA
+cannot lower the deferred-reduction family multi-device (see ROADMAP
+"jax uprev"); the serve-side SDC drill is mesh-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.chaos.faults import (FailureInjector, FaultSpace, FaultSpec,
+                                SDCInjector, ensure_registered, flip_bit,
+                                get_surface)
+
+__all__ = ["TrainConfig", "ServeConfig", "FaultResult", "CampaignResult",
+           "CampaignRunner", "classify"]
+
+
+# ---------------------------------------------------------------------------
+# configs + result records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """The train workload under drill (tiny on purpose: the campaign's
+    job is coverage, the scale story lives in launch.dryrun/roofline)."""
+    arch: str = "qwen2-0.5b"
+    steps: int = 6
+    batch: int = 8
+    seq: int = 16
+    lr: float = 1e-3
+    # end-state tolerance for "tolerance"-promise comparisons: float-solve
+    # repairs (diskless recover, abft_psum correction) are near-exact, not
+    # bit-exact; the measured max|diff| is recorded either way
+    tol: float = 1e-2
+    pod_mesh: Tuple[int, ...] = (2, 2, 2)   # (pod, data, model) topology
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """The serve workload under drill (mirrors tests/test_serve_drill)."""
+    arch: str = "qwen2-0.5b"
+    slots: int = 4
+    max_len: int = 48
+    n_requests: int = 4
+    prompt_len: int = 8
+    max_new_tokens: int = 5
+    mesh: Tuple[int, int] = (4, 2)          # (data, model), used when the
+    #                                         devices exist; else (1, 1)
+
+
+@dataclasses.dataclass
+class FaultResult:
+    """One classified campaign event (fault run or clean sweep)."""
+    name: str
+    workload: str
+    kind: str                    # fault kind, or "clean_sweep"
+    surface: str
+    protected: bool
+    promise: str
+    outcome: str                 # corrected|detected|missed|false_alarm|
+    #                              clean|skipped
+    detected: bool
+    corrected: bool
+    rung: Optional[str]          # recovery rung that fired (None = none)
+    recovery_latency_s: Optional[float]
+    end_state: str               # bit_identical|within_tol|diverged|
+    #                              not_compared
+    max_abs_diff: Optional[float]
+    wall_s: float
+    spec: Optional[dict] = None  # the originating FaultSpec (None = sweep)
+    note: str = ""
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    space: str
+    results: List[FaultResult]
+    meta: dict
+
+    def to_dict(self) -> dict:
+        from repro.chaos import report
+        return report.campaign_dict(self)
+
+    def markdown(self) -> str:
+        from repro.chaos import report
+        return report.render_markdown(self)
+
+
+# ---------------------------------------------------------------------------
+# classification (pure — unit-tested directly)
+# ---------------------------------------------------------------------------
+
+
+def _end_ok(promise: str, end_state: str) -> bool:
+    if promise == "bit_identity":
+        return end_state == "bit_identical"
+    if promise == "tolerance":
+        return end_state in ("bit_identical", "within_tol")
+    return False
+
+
+def classify(*, injected: bool, detected: bool, corrected: bool,
+             end_state: str, promise: str) -> str:
+    """The outcome taxonomy, as a pure function of the observed signals.
+
+    ``corrected`` is the mechanism's own claim (a repair fired); the
+    outcome only says "corrected" when the end state ALSO honors the
+    domain's promise — a repair that left the state outside its contract
+    degrades to "detected".  A clean run (injected=False) is "clean"
+    unless a detector fired, which is a "false_alarm".
+    """
+    if not injected:
+        return "false_alarm" if detected else "clean"
+    if not detected:
+        return "missed"
+    if corrected and _end_ok(promise, end_state):
+        return "corrected"
+    return "detected"
+
+
+def _compare_trees(a, b, tol: float) -> Tuple[str, Optional[float]]:
+    """Host-side leafwise comparison -> (end_state, max_abs_diff);
+    diff is None when the divergence is unmeasurable (NaN/inf/integer)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), (len(la), len(lb))
+    bitwise = all(np.array_equal(np.asarray(x), np.asarray(y),
+                                 equal_nan=True) for x, y in zip(la, lb))
+    if bitwise:
+        return "bit_identical", 0.0
+    worst = 0.0
+    for x, y in zip(la, lb):
+        x = np.asarray(x)
+        if not np.issubdtype(x.dtype, np.floating):
+            if not np.array_equal(x, np.asarray(y)):
+                return "diverged", None     # structural/int divergence
+            continue
+        d = np.abs(x.astype(np.float64) - np.asarray(y, np.float64))
+        if not np.all(np.isfinite(d)):
+            return "diverged", None         # NaN/inf: unmeasurable distance
+        worst = max(worst, float(np.max(d)) if d.size else 0.0)
+    return ("within_tol" if worst <= tol else "diverged"), worst
+
+
+def _host(tree):
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+
+class CampaignRunner:
+    def __init__(self, space: FaultSpace, *,
+                 train: Optional[TrainConfig] = None,
+                 serve: Optional[ServeConfig] = None,
+                 verbose: bool = False):
+        ensure_registered()
+        self.space = space
+        self.train = train or TrainConfig()
+        self.serve = serve or ServeConfig()
+        self.verbose = verbose
+        self._train_golden: Dict[tuple, dict] = {}
+        self._serve_golden: Dict[tuple, dict] = {}
+        self._serve_eng = None      # the warmed drill-free engine, reused
+        self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
+
+    def _log(self, msg: str):
+        if self.verbose:
+            print(f"[chaos] {msg}", flush=True)
+
+    # -- public ---------------------------------------------------------------
+
+    def run(self, workloads: Tuple[str, ...] = ("train", "serve")
+            ) -> CampaignResult:
+        t0 = time.time()
+        results: List[FaultResult] = []
+        try:
+            for spec in self.space:
+                if spec.workload not in workloads:
+                    continue
+                self._log(f"spec {spec.name}")
+                t1 = time.time()
+                try:
+                    res = self._run_spec(spec)
+                except _Skip as sk:
+                    res = self._skipped(spec, str(sk))
+                res.wall_s = time.time() - t1
+                self._log(f"  -> {res.outcome} (rung={res.rung}, "
+                          f"end={res.end_state})")
+                results.append(res)
+            # every golden run doubles as a clean sweep: report it
+            results.extend(self._clean_rows(workloads))
+        finally:
+            # checkpoint dirs must not outlive the sweep even on an
+            # exception; recreate so the runner stays reusable
+            self._serve_eng = None
+            self._tmp.cleanup()
+            self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
+        meta = {
+            "backend": jax.default_backend(),
+            "n_devices": len(jax.devices()),
+            "train": dataclasses.asdict(self.train),
+            "serve": dataclasses.asdict(self.serve),
+            "wall_s": time.time() - t0,
+        }
+        return CampaignResult(space=self.space.name, results=results,
+                              meta=meta)
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _run_spec(self, spec: FaultSpec) -> FaultResult:
+        if spec.workload == "serve":
+            return self._run_serve(spec)
+        if spec.kind == "checksum_state_flip":
+            return self._run_kernel_state_flip(spec)
+        return self._run_train(spec)
+
+    def _skipped(self, spec: FaultSpec, why: str) -> FaultResult:
+        s = get_surface(spec.surface)
+        return FaultResult(
+            name=spec.name, workload=spec.workload, kind=spec.kind,
+            surface=spec.surface, protected=s.protected, promise=s.promise,
+            outcome="skipped", detected=False, corrected=False, rung=None,
+            recovery_latency_s=None, end_state="not_compared",
+            max_abs_diff=None, wall_s=0.0, spec=spec.asdict(), note=why)
+
+    def _result(self, spec: FaultSpec, *, detected, corrected, rung,
+                latency, end_state, max_abs_diff, note="") -> FaultResult:
+        s = get_surface(spec.surface)
+        outcome = classify(injected=True, detected=detected,
+                           corrected=corrected, end_state=end_state,
+                           promise=s.promise)
+        return FaultResult(
+            name=spec.name, workload=spec.workload, kind=spec.kind,
+            surface=spec.surface, protected=s.protected, promise=s.promise,
+            outcome=outcome, detected=detected, corrected=corrected,
+            rung=rung, recovery_latency_s=latency, end_state=end_state,
+            max_abs_diff=max_abs_diff, wall_s=0.0, spec=spec.asdict(),
+            note=note)
+
+    # -- train workload -------------------------------------------------------
+
+    def _train_mesh(self, spec: FaultSpec):
+        """(mesh_shape, axis_names, opts_tag) for one spec.
+
+        Topology/erasure faults run on the multi-pod mesh; SDC and DRAM
+        faults run single-device under the fully protected step (deferred
+        reduction + abft_reduce="correct"), which the pinned XLA cannot
+        lower multi-device — see the module docstring.
+        """
+        if spec.kind in ("pod_loss", "slow_pod", "shard_loss"):
+            need = math.prod(self.train.pod_mesh)
+            if len(jax.devices()) >= need:
+                return self.train.pod_mesh, ("pod", "data", "model"), "plain"
+            if spec.kind == "shard_loss":
+                # rung 2 works at any DP extent — degrade to one device
+                # (p=1: the single logical shard is lost and rebuilt)
+                return (1, 1), ("data", "model"), "plain"
+            raise _Skip(f"needs {need} devices for pod mesh "
+                        f"{self.train.pod_mesh}, have {len(jax.devices())}")
+        return (1, 1), ("data", "model"), "protected"
+
+    def _train_opts(self, tag: str):
+        from repro.train.step import StepOptions
+        if tag == "protected":
+            return StepOptions(remat=False, defer_grad_reduce=True,
+                               abft_reduce="correct")
+        return StepOptions(remat=False)
+
+    def _make_mesh(self, shape, names):
+        n = math.prod(shape)
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devs, names)
+
+    def _train_runtime(self, mesh_shape, names, tag, *, policy=None,
+                       injector=None, with_disk=False):
+        from repro.ckpt.disk import CheckpointManager
+        from repro.ft.runtime import ElasticRuntime, FTPolicy
+        from repro.configs.base import ShapeConfig, smoke_config
+        from repro.train.optimizer import AdamWConfig
+
+        cfg = smoke_config(self.train.arch)
+        shape = ShapeConfig("chaos", self.train.seq, self.train.batch,
+                            "train")
+        adamw = AdamWConfig(lr=self.train.lr,
+                            total_steps=self.train.steps, warmup_steps=1)
+        mesh = self._make_mesh(mesh_shape, names)
+        mgr = None
+        if with_disk:
+            d = tempfile.mkdtemp(dir=self._tmp.name)
+            mgr = CheckpointManager(d, keep=self.train.steps + 1)
+        rt = ElasticRuntime(
+            cfg, shape, mesh, adamw=adamw, opts=self._train_opts(tag),
+            policy=policy or FTPolicy(diskless_every=10 ** 6,
+                                      disk_every=10 ** 6),
+            ckpt_manager=mgr, injector=injector)
+        return rt
+
+    def _golden_train(self, mesh_shape, names, tag) -> dict:
+        """Clean run for one (mesh, opts) configuration, cached."""
+        key = (tuple(mesh_shape), tag)
+        if key in self._train_golden:
+            return self._train_golden[key]
+        self._log(f"golden train {mesh_shape} [{tag}]")
+        rt = self._train_runtime(mesh_shape, names, tag)
+        try:
+            state = rt.init_state(0)
+            oks, walls, losses = [], [], []
+            for i in range(self.train.steps):
+                t0 = time.perf_counter()
+                state, m = rt.train_step(i, state)
+                jax.block_until_ready(m["loss"])
+                walls.append(time.perf_counter() - t0)
+                losses.append(float(m["loss"]))
+                if "abft_ok" in m:
+                    oks.append(bool(m["abft_ok"]))
+            g = {"final": _host(state), "losses": losses, "walls": walls,
+                 "oks": oks, "detections": sum(1 for o in oks if not o),
+                 "mesh_shape": tuple(mesh_shape), "tag": tag}
+        finally:
+            rt.close()
+        self._train_golden[key] = g
+        return g
+
+    def _run_train(self, spec: FaultSpec) -> FaultResult:
+        # a spec whose fire step lies beyond the workload never injects:
+        # classifying it would fabricate a "missed" (and trip the
+        # protected-domain gate) for a fault that never happened.
+        # slow_pod is exempt — its injection is the per-step heartbeat
+        # delay, active from step 0.
+        if spec.kind != "slow_pod" and spec.step >= self.train.steps:
+            raise _Skip(f"fire step {spec.step} >= workload steps "
+                        f"{self.train.steps}: fault would never inject")
+        handlers = {
+            "sdc_collective": self._train_sdc,
+            "dram_params": self._train_dram,
+            "dram_opt_state": self._train_dram,
+            "shard_loss": self._train_shard_loss,
+            "pod_loss": self._train_pod_loss,
+            "slow_pod": self._train_slow_pod,
+        }
+        return handlers[spec.kind](spec)
+
+    def _train_sdc(self, spec: FaultSpec) -> FaultResult:
+        """Bit-flip-sized delta into one protected gradient reduction of
+        one compiled step — the injected step variant is a second compiled
+        program (injection location is compile-time static in
+        StepOptions), exactly the drill pattern of ft.runtime."""
+        from repro.train.step import build_train_step, make_inputs
+
+        mesh_shape, names, tag = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, tag)
+        rt = self._train_runtime(mesh_shape, names, tag)
+        try:
+            opts = dataclasses.replace(rt.opts,
+                                       sdc_inject=(spec.shard, spec.delta))
+            with jax.set_mesh(rt.gen.mesh):
+                fn, in_sh, out_sh = build_train_step(
+                    rt.cfg, rt.gen.mesh, rt.shape, rt.adamw, opts)
+                # AOT like the runtime's own generations: the drilled
+                # step's first call must not carry compile time into the
+                # measured recovery latency
+                drill_fn = jax.jit(
+                    fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(0,)).lower(
+                        rt.gen.state_shapes,
+                        make_inputs(rt.cfg, rt.shape)).compile()
+            state = rt.init_state(0)
+            detected = False
+            drill_wall = None
+            for i in range(self.train.steps):
+                if i == spec.step:
+                    batch = rt.place_batch(i)
+                    t0 = time.perf_counter()
+                    state, m = drill_fn(state, batch)
+                    jax.block_until_ready(m["loss"])
+                    drill_wall = time.perf_counter() - t0
+                    detected = not bool(m["abft_ok"])
+                else:
+                    state, m = rt.train_step(i, state)
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        clean_mean = sum(golden["walls"]) / len(golden["walls"])
+        latency = (max(drill_wall - clean_mean, 0.0)
+                   if (detected and drill_wall is not None) else None)
+        return self._result(
+            spec, detected=detected, corrected=detected, rung="abft_inflight"
+            if detected else None, latency=latency, end_state=end_state,
+            max_abs_diff=diff,
+            note="correction fused into the reduction; end state compared "
+                 "against the clean golden run")
+
+    def _train_dram(self, spec: FaultSpec) -> FaultResult:
+        """Silent bit flip in resident state between steps.  Runs under the
+        FULLY protected step (matmul + collective checksums would fire if
+        they could see it) — the honest expected outcome is `missed`:
+        checksums are computed from inputs at call time, so corrupted
+        state checksums consistently."""
+        mesh_shape, names, tag = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, tag)
+        rt = self._train_runtime(mesh_shape, names, tag)
+        group = "params" if spec.kind == "dram_params" else "opt"
+        try:
+            state = rt.init_state(0)
+            detected = False
+            leaf_name = None
+            for i in range(self.train.steps):
+                if i == spec.step:
+                    state, leaf_name = _flip_state_leaf(state, group, spec)
+                    state = jax.device_put(state, rt.gen.in_shardings[0])
+                state, m = rt.train_step(i, state)
+                if "abft_ok" in m and not bool(m["abft_ok"]):
+                    detected = True
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        return self._result(
+            spec, detected=detected, corrected=False, rung=None,
+            latency=None, end_state=end_state, max_abs_diff=diff,
+            note=f"bit {spec.bit} flipped in {group} leaf {leaf_name!r} at "
+                 f"step {spec.step}; no detector watches state at rest")
+
+    def _train_shard_loss(self, spec: FaultSpec) -> FaultResult:
+        """Erasure of one DP shard (platform-signaled) -> rung-2 diskless
+        recovery and a bounded-rollback replay."""
+        from repro.ft.runtime import FTPolicy
+
+        mesh_shape, names, tag = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, tag)
+        policy = FTPolicy(diskless_every=2, disk_every=10 ** 6, f=1)
+        rt = self._train_runtime(mesh_shape, names, tag, policy=policy,
+                                 injector=FailureInjector(
+                                     spec.failure_plan()))
+        if not 0 <= spec.shard < rt.p:
+            rt.close()
+            raise _Skip(f"shard {spec.shard} outside DP extent {rt.p}")
+        try:
+            state = rt.init_state(0)
+            detected = False
+            rung = None
+            latency = None
+            i = 0
+            while i < self.train.steps:
+                rt.checkpoint(i, state)
+                t0 = time.perf_counter()
+                state, rollback = rt.maybe_shard_failure(i, state)
+                if rollback is not None:
+                    jax.block_until_ready(jax.tree.leaves(state)[0])
+                    latency = time.perf_counter() - t0
+                    detected = True
+                    rung = "diskless"
+                    i = rollback   # deterministic pipeline replays exactly
+                    continue
+                state, _ = rt.train_step(i, state)
+                i += 1
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        return self._result(
+            spec, detected=detected, corrected=detected, rung=rung,
+            latency=latency, end_state=end_state, max_abs_diff=diff,
+            note="detection is the platform's failure signal (simulated); "
+                 "lost shard solved from rotated checksums, rollback "
+                 "bounded by the encode cadence")
+
+    def _train_pod_loss(self, spec: FaultSpec) -> FaultResult:
+        """Whole-pod loss -> rung-3 elastic shrink (then re-grow), via the
+        variant-selected restore path: checksum capacity f=2 keeps the
+        loss within the diskless solve (rung 3a), f=1 forces the disk
+        restore (rung 3b)."""
+        from repro.ft.runtime import FTPolicy
+
+        mesh_shape, names, tag = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, tag)
+        f = 2 if spec.variant == "diskless" else 1
+        policy = FTPolicy(diskless_every=1, disk_every=1, f=f)
+        rt = self._train_runtime(mesh_shape, names, tag, policy=policy,
+                                 with_disk=True)
+        regrow_at = min(spec.step + 2, self.train.steps - 1)
+        try:
+            state = rt.init_state(0)
+            fired = regrown = False
+            rung = latency = rollback = None
+            rep = None
+            i = 0
+            while i < self.train.steps:
+                if not fired and i == spec.step:
+                    rt.ckpt.wait()      # in-flight async save must land
+                    state, rollback, rep = rt.lose_pod(state)
+                    fired = True
+                    rung = f"elastic:{rep.restore_path}"
+                    latency = rep.reshard_wall_s
+                    i = rollback
+                    continue
+                if fired and not regrown and i == regrow_at:
+                    state, _ = rt.regrow(state, at_step=i)
+                    regrown = True
+                rt.checkpoint(i, state)
+                state, _ = rt.train_step(i, state)
+                i += 1
+            if rt.ckpt is not None:
+                rt.ckpt.wait()
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        note = ""
+        if rep is not None:
+            note = (f"shrink {rep.mesh_from}->{rep.mesh_to} via "
+                    f"{rep.restore_path}, rollback to {rollback}, "
+                    f"{rep.bytes_respecced}/{rep.bytes_total} bytes "
+                    f"re-specced, recompile {rep.compile_s:.2f}s"
+                    + (", regrown" if regrown else ""))
+        return self._result(
+            spec, detected=fired, corrected=fired, rung=rung,
+            latency=latency, end_state=end_state, max_abs_diff=diff,
+            note=note)
+
+    def _train_slow_pod(self, spec: FaultSpec) -> FaultResult:
+        """Straggler: one pod's heartbeat reports (and really incurs) a
+        threshold-exceeding per-step delay; the EWMA detector must trip
+        and demote it through the elastic rung."""
+        from repro.ft.runtime import FTPolicy
+
+        mesh_shape, names, tag = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, tag)
+        policy = FTPolicy(diskless_every=1, disk_every=1, f=1,
+                          slow_pod_threshold=2.0, straggler_warmup=2)
+        rt = self._train_runtime(mesh_shape, names, tag, policy=policy,
+                                 with_disk=True)
+        n_pods = mesh_shape[0]
+        if not 0 <= spec.pod < n_pods:
+            rt.close()
+            raise _Skip(f"pod {spec.pod} outside pod extent {n_pods}")
+
+        def heartbeat(step, wall):
+            # the slow pod's host callback really is late: it sleeps past
+            # the demotion threshold (floor delay_s) and reports the wall
+            # it actually took
+            extra = spec.delay_s + policy.slow_pod_threshold * wall
+            time.sleep(min(extra, 0.5))
+            walls = [wall] * n_pods
+            walls[spec.pod] = wall + extra
+            return walls
+
+        rt.pod_heartbeat = heartbeat
+        try:
+            state = rt.init_state(0)
+            demoted = False
+            rung = latency = None
+            trip_step = None
+            rep = None
+            i = 0
+            while i < self.train.steps:
+                rt.checkpoint(i, state)
+                state, _ = rt.train_step(i, state)
+                pod = rt.maybe_straggler()
+                if pod is not None and not demoted:
+                    rt.pod_heartbeat = None   # the slow pod is drained
+                    state, rollback, rep = rt.demote_pod(state, pod)
+                    demoted = True
+                    trip_step = i
+                    rung = f"demote:{rep.restore_path}"
+                    latency = rep.reshard_wall_s
+                    i = rollback
+                    continue
+                i += 1
+            if rt.ckpt is not None:
+                rt.ckpt.wait()
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        return self._result(
+            spec, detected=demoted, corrected=demoted, rung=rung,
+            latency=latency, end_state=end_state, max_abs_diff=diff,
+            note=(f"EWMA tripped at step {trip_step} "
+                  f"(threshold {policy.slow_pod_threshold}x, warmup "
+                  f"{policy.straggler_warmup}); demoted pod via lose_pod"
+                  if demoted else "detector never tripped"))
+
+    # -- kernel surface (train protection stack) ------------------------------
+
+    def _run_kernel_state_flip(self, spec: FaultSpec) -> FaultResult:
+        """Bit flip in the accumulate kernel's CARRIED CHECKSUM STATE
+        between two chained calls.  The next call's verify prologue must
+        see the residual (detected) but must NOT "repair" — only one
+        residual family trips, and rewriting data off a corrupted checksum
+        would corrupt healthy values.  Drilled through the XLA twin of the
+        kernel prologue off-TPU (bit-for-bit the same semantics; see
+        kernels.ops.abft_matmul_acc)."""
+        from repro.kernels import ops
+
+        rng = np.random.RandomState(spec.seed)
+        m = n = 256
+        k = 256
+        plan = ops.pick_blocks(m, k, n, carry=True, require_exact=True,
+                               vmem_budget=2 * 2 ** 20)
+        assert plan is not None
+        a1, a2 = (jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+                  for _ in range(2))
+        b1, b2 = (jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+                  for _ in range(2))
+        c0 = jnp.zeros((m, n), jnp.float32)
+        st0 = ops.acc_state_zeros(plan)
+        # golden chain
+        c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
+                                         backend="jnp")
+        c2, _, s_clean = ops.abft_matmul_acc(a2, b2, c1, st1, plan=plan,
+                                             backend="jnp")
+        # fault chain: flip one bit of the plain-sum column checksum row
+        ccol, crow = st1
+        idx = int(rng.randint(ccol[:, 0, :].size))
+        t_i, col = idx // ccol.shape[2], idx % ccol.shape[2]
+        flat = np.ravel_multi_index((t_i, 0, col), ccol.shape)
+        ccol_bad = flip_bit(ccol, int(flat), bit=spec.bit)
+        c2f, _, stats = ops.abft_matmul_acc(a2, b2, c1, (ccol_bad, crow),
+                                            plan=plan, backend="jnp")
+        detected = bool(np.asarray(stats[..., 0]).any())
+        repaired = bool(np.asarray(stats[..., 1]).any())
+        end_state, diff = _compare_trees(_host(c2f), _host(c2), 0.0)
+        return self._result(
+            spec, detected=detected, corrected=repaired, rung=None,
+            latency=None, end_state=end_state, max_abs_diff=diff,
+            note=f"flip in carried ccol tile {t_i} col {col}: one residual "
+                 f"family trips -> detect-only by design (repair gate needs "
+                 f"both); data must pass through untouched "
+                 f"(repaired={repaired})")
+
+    # -- serve workload -------------------------------------------------------
+
+    def _serve_mesh(self):
+        need = math.prod(self.serve.mesh)
+        if len(jax.devices()) >= need:
+            return self.serve.mesh
+        return (1, 1)
+
+    def _serve_prompts(self):
+        from repro.configs.base import smoke_config
+        cfg = smoke_config(self.serve.arch)
+        rs = np.random.RandomState(0)
+        return cfg, [rs.randint(0, cfg.vocab_size,
+                                self.serve.prompt_len).tolist()
+                     for _ in range(self.serve.n_requests)]
+
+    def _serve_engine(self, sdc=None):
+        from repro.models import transformer as tf
+        from repro.serve.engine import ServeEngine
+
+        cfg, prompts = self._serve_prompts()
+        if sdc is None:
+            # drill-free engines are identical across golden + DRAM specs:
+            # build/warm once, reset() between runs (the PR 3 reuse path)
+            if self._serve_eng is not None:
+                self._serve_eng.reset()
+                return self._serve_eng, prompts
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = self._make_mesh(self._serve_mesh(), ("data", "model"))
+        eng = ServeEngine(cfg, params, slots=self.serve.slots,
+                          max_len=self.serve.max_len, mesh=mesh,
+                          abft_reduce="correct", sdc=sdc)
+        eng.warm(prompt_len=self.serve.prompt_len)
+        if sdc is None:
+            self._serve_eng = eng
+        return eng, prompts
+
+    def _drive(self, eng, prompts, on_step=None):
+        from repro.serve.engine import Request
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p,
+                               max_new_tokens=self.serve.max_new_tokens))
+        fin = eng.run(on_step=on_step)
+        return {r.rid: list(r.output) for r in fin}
+
+    def _golden_serve(self) -> dict:
+        key = self._serve_mesh()
+        if key in self._serve_golden:
+            return self._serve_golden[key]
+        self._log(f"golden serve mesh {key}")
+        eng, prompts = self._serve_engine()
+        outputs = self._drive(eng, prompts)
+        g = {"outputs": outputs, "stats": eng.stats.summary(),
+             "detections": eng.stats.detections, "mesh": key}
+        self._serve_golden[key] = g
+        return g
+
+    def _run_serve(self, spec: FaultSpec) -> FaultResult:
+        golden = self._golden_serve()
+        if spec.kind == "sdc_collective":
+            m_ext = self._serve_mesh()[1]
+            if not 0 <= spec.shard < m_ext:
+                raise _Skip(f"shard {spec.shard} outside model extent "
+                            f"{m_ext}")
+            eng, prompts = self._serve_engine(
+                sdc=SDCInjector(spec.sdc_plan()))
+            outputs = self._drive(eng, prompts)
+            st = eng.stats
+            if not st.events:
+                raise _Skip(f"planned SDC at decode step {spec.step} never "
+                            f"fired ({st.decode_steps} decode steps ran)")
+            detected = st.detections > 0
+            corrected = st.corrections > 0 and all(
+                e.corrected for e in st.events)
+            end_state = ("bit_identical" if outputs == golden["outputs"]
+                         else "diverged")
+            return self._result(
+                spec, detected=detected, corrected=corrected,
+                rung="abft_inflight" if detected else None,
+                latency=st.recovery_latency_s() if detected else None,
+                end_state=end_state,
+                max_abs_diff=0.0 if end_state == "bit_identical" else None,
+                note=f"{st.detections} detection(s) in "
+                     f"{st.decode_steps} decode steps; located "
+                     + ", ".join(f"(r{e.row},c{e.col})" for e in st.events))
+        if spec.kind in ("dram_kv_cache", "dram_params"):
+            eng, prompts = self._serve_engine()
+            fired = {}
+
+            def on_step(engine, step):
+                if step == spec.step and not fired:
+                    fired["leaf"], fired["undo"] = _flip_engine_bit(engine,
+                                                                    spec)
+
+            try:
+                outputs = self._drive(eng, prompts, on_step=on_step)
+            finally:
+                if "undo" in fired:
+                    fired["undo"]()     # the engine is shared: restore the
+                    #                     pre-flip leaf (arrays immutable)
+            st = eng.stats
+            if not fired:
+                raise _Skip(f"flip step {spec.step} never reached "
+                            f"({st.decode_steps} decode steps ran)")
+            detected = st.detections > 0
+            end_state = ("bit_identical" if outputs == golden["outputs"]
+                         else "diverged")
+            return self._result(
+                spec, detected=detected, corrected=False, rung=None,
+                latency=None, end_state=end_state,
+                max_abs_diff=0.0 if end_state == "bit_identical" else None,
+                note=f"bit {spec.bit} flipped in {fired.get('leaf')!r} at "
+                     f"decode step {spec.step}; outputs "
+                     f"{'unchanged' if end_state == 'bit_identical' else 'diverged'}, "
+                     f"{st.detections} detections")
+        raise ValueError(f"unhandled serve kind {spec.kind!r}")
+
+    # -- clean sweeps ---------------------------------------------------------
+
+    def _clean_rows(self, workloads) -> List[FaultResult]:
+        rows = []
+        if "train" in workloads and not self._train_golden:
+            # no train spec ran: still sweep the base protected config
+            self._golden_train((1, 1), ("data", "model"), "protected")
+        if "serve" in workloads and not self._serve_golden:
+            self._golden_serve()
+        for (shape, tag), g in sorted(self._train_golden.items()):
+            detected = g["detections"] > 0
+            outcome = classify(injected=False, detected=detected,
+                               corrected=False, end_state="bit_identical",
+                               promise="none")
+            sweep_surface = ("dist.collectives/abft_psum"
+                             if tag == "protected" else
+                             "ft.runtime/topology" if len(shape) == 3
+                             else "ckpt.diskless/shards")
+            rows.append(FaultResult(
+                name=f"train:clean_sweep:{'x'.join(map(str, shape))}:{tag}",
+                workload="train", kind="clean_sweep",
+                surface=sweep_surface,
+                protected=True, promise="none", outcome=outcome,
+                detected=detected, corrected=False, rung=None,
+                recovery_latency_s=None, end_state="bit_identical",
+                max_abs_diff=0.0, wall_s=sum(g["walls"]),
+                note=f"{g['detections']} detection(s) over "
+                     f"{self.train.steps} clean steps "
+                     f"({len(g['oks'])} protected reductions observed)"))
+        for key, g in sorted(self._serve_golden.items()):
+            detected = g["detections"] > 0
+            outcome = classify(injected=False, detected=detected,
+                               corrected=False, end_state="bit_identical",
+                               promise="none")
+            rows.append(FaultResult(
+                name=f"serve:clean_sweep:{'x'.join(map(str, key))}",
+                workload="serve", kind="clean_sweep",
+                surface="serve.engine/logits_reduce", protected=True,
+                promise="none", outcome=outcome, detected=detected,
+                corrected=False, rung=None, recovery_latency_s=None,
+                end_state="bit_identical", max_abs_diff=0.0,
+                wall_s=g["stats"]["decode_s"] + g["stats"]["prefill_s"],
+                note=f"{g['detections']} detection(s) over "
+                     f"{g['stats']['decode_steps']} clean decode steps"))
+        return rows
+
+
+class _Skip(Exception):
+    """A spec that cannot run in this environment (reported, not dropped)."""
+
+
+# ---------------------------------------------------------------------------
+# DRAM flip helpers
+# ---------------------------------------------------------------------------
+
+
+def _flip_candidates(tree, *, min_ndim: int = 0):
+    """Flippable (path, leaf) pairs of a pytree: float32, non-trivial."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(p, x) for p, x in flat
+            if x.dtype == jnp.float32 and x.size >= 64
+            and x.ndim >= min_ndim]
+
+
+def _replace_leaf(tree, path, value):
+    """The pytree with the leaf at `path` swapped for `value`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [value if p == path else x for p, x in flat])
+
+
+def _flip_state_leaf(state, group: str, spec: FaultSpec):
+    """Flip one bit of one float32 leaf of state[group], leaf and element
+    chosen deterministically from the spec's seed.  Returns
+    (state, leaf_name)."""
+    cands = _flip_candidates(state[group])
+    if not cands:
+        raise ValueError(f"no flippable float32 leaf in state[{group!r}]")
+    rng = np.random.RandomState(spec.seed)
+    path, leaf = cands[int(rng.randint(len(cands)))]
+    idx = int(rng.randint(leaf.size))
+    new_sub = _replace_leaf(state[group], path,
+                            flip_bit(leaf, idx, bit=spec.bit))
+    return (dict(state, **{group: new_sub}),
+            f"{group}{jax.tree_util.keystr(path)}[{idx}]")
+
+
+def _flip_engine_bit(engine, spec: FaultSpec):
+    """Flip one bit inside a live ServeEngine: a KV-cache leaf (an early,
+    attended position of slot 0) or a params leaf (the embedding table /
+    first float32 weight).  Returns ``(leaf_name, undo)`` — ``undo`` puts
+    the original (immutable) leaf back, so a shared engine survives a
+    params drill (the cache is cleared by ``reset()`` anyway)."""
+    if spec.kind == "dram_kv_cache":
+        cands = _flip_candidates(engine.cache, min_ndim=3)
+        assert cands, "no float32 KV leaf to corrupt"
+        path, leaf = cands[0]
+        # slot 0, an early (already-attended) position: first leading-dim
+        # entry, batch index 0, position 1, everything else 0
+        pos = (0, 0, 1) + (0,) * (leaf.ndim - 3)
+        idx = int(np.ravel_multi_index(pos, leaf.shape))
+        engine.cache = _replace_leaf(engine.cache, path,
+                                     flip_bit(leaf, idx, bit=spec.bit))
+        return f"cache{jax.tree_util.keystr(path)}[{idx}]", lambda: None
+    # dram_params: hit the embedding table (the gather surface) when
+    # present, else the first sizable float32 weight
+    cands = _flip_candidates(engine.params)
+    assert cands, "no float32 param leaf to corrupt"
+    embed = [(p, x) for p, x in cands
+             if "embed" in jax.tree_util.keystr(p)]
+    path, leaf = (embed or cands)[0]
+    rng = np.random.RandomState(spec.seed)
+    idx = int(rng.randint(leaf.size))
+
+    def put(value):
+        engine.params = _replace_leaf(engine.params, path, value)
+
+    put(flip_bit(leaf, idx, bit=spec.bit))
+    return f"params{jax.tree_util.keystr(path)}[{idx}]", lambda: put(leaf)

@@ -1,0 +1,519 @@
+"""Unified fault taxonomy + protection-surface registry + injectors.
+
+Three things live here, deliberately in one dependency-light module:
+
+  1. **The surface registry.**  A protection domain (the checksum-verified
+     collective, the fused kernel's carried state, the diskless erasure
+     code, the elastic runtime's topology ladder, the serving engine's
+     verified unembed) registers a `Surface` at import time describing
+     what it protects, what detects a fault there, and what end-state
+     promise a successful recovery makes (``bit_identity`` vs
+     ``tolerance``).  Surfaces with ``protected=False`` form the honest
+     *uncovered ledger* — flash-attention, layernorm, the embedding
+     gather, and state sitting in DRAM have no detector today, and the
+     campaign reports that instead of skipping it.
+
+  2. **The `FaultSpec` taxonomy** — one declarative record per injectable
+     fault, naming its kind, its target surface, the workload it runs
+     under, and a deterministic seed.  `FaultSpace` builds cartesian or
+     seeded-sampled sweeps of them.
+
+  3. **The injector implementations** — `SDCPlan`/`SDCInjector` (bit-flip
+     SDC on a protected collective), `FailurePlan`/`FailureInjector`
+     (shard erasure), and the two injection primitives every drill path
+     shares: `flip_bit` (the literal fault model) and `scatter_delta`
+     (the per-shard delta vector the serving engine scatters because
+     `lax.axis_index` cannot lower in its partial-manual region).  These
+     were born in `repro.ft.failures`, which now re-exports them; the
+     `FaultSpec.sdc_plan()` / `FaultSpec.failure_plan()` adapters are how
+     a declarative spec reaches the existing drill paths unchanged.
+
+This module imports only jax/numpy so that the protection-domain modules
+(`dist.collectives`, `kernels.ops`, `ckpt.diskless`, `ft.runtime`,
+`serve.engine`) can import it at module scope without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "KINDS", "Surface", "register_surface", "get_surface", "surfaces",
+    "uncovered_surfaces", "ensure_registered",
+    "FaultSpec", "FaultSpace",
+    "FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
+    "flip_bit", "scatter_delta",
+]
+
+
+# ---------------------------------------------------------------------------
+# protection-surface registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Surface:
+    """One protection domain (or honestly-unprotected surface).
+
+    ``promise`` is the end-state contract a successful recovery makes and
+    the campaign's comparison mode against the golden run:
+    ``bit_identity`` (outputs must match bit for bit), ``tolerance``
+    (float-solve repair: near-exact, compared within a tolerance), or
+    ``none`` (no protection — nothing is promised).  ``kinds`` lists the
+    fault kinds this surface's protection actually covers; a fault of any
+    other kind landing here is *outside the envelope* and must show up as
+    ``missed`` in the coverage matrix, not be silently skipped.
+    """
+    name: str               # e.g. "dist.collectives/abft_psum"
+    owner: str              # module that registered it
+    protected: bool
+    promise: str = "none"   # "bit_identity" | "tolerance" | "none"
+    detector: str = ""      # what sees a fault here (empty = nothing does)
+    kinds: Tuple[str, ...] = ()
+    note: str = ""
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_REGISTRY: Dict[str, Surface] = {}
+
+_PROMISES = ("bit_identity", "tolerance", "none")
+
+
+def register_surface(name: str, *, owner: str, protected: bool,
+                     promise: str = "none", detector: str = "",
+                     kinds: Sequence[str] = (), note: str = "") -> Surface:
+    """Register (idempotently) a protection domain / uncovered surface."""
+    if promise not in _PROMISES:
+        raise ValueError(f"unknown promise {promise!r}: expected one of "
+                         f"{_PROMISES}")
+    if protected and not detector:
+        raise ValueError(f"protected surface {name!r} must name its "
+                         "detector")
+    s = Surface(name=name, owner=owner, protected=protected, promise=promise,
+                detector=detector, kinds=tuple(kinds), note=note)
+    _REGISTRY[name] = s
+    return s
+
+
+def get_surface(name: str) -> Surface:
+    if name not in _REGISTRY:
+        ensure_registered()
+    return _REGISTRY[name]
+
+
+def surfaces() -> Dict[str, Surface]:
+    """A copy of the current registry (call `ensure_registered` first for
+    the full picture)."""
+    return dict(_REGISTRY)
+
+
+def uncovered_surfaces() -> List[Surface]:
+    """The honest ledger: every registered surface with no protection."""
+    return sorted((s for s in _REGISTRY.values() if not s.protected),
+                  key=lambda s: s.name)
+
+
+def ensure_registered() -> Dict[str, Surface]:
+    """Import every module that registers a surface, then return the
+    registry.  Registration happens at import time in the owning module;
+    campaigns and reports call this so the ledger is complete even when a
+    workload path was never touched."""
+    import importlib
+    for mod in ("repro.dist.collectives", "repro.kernels.ops",
+                "repro.kernels.flash_attention", "repro.ckpt.diskless",
+                "repro.ft.runtime", "repro.serve.engine",
+                "repro.models.layers"):
+        importlib.import_module(mod)
+    return dict(_REGISTRY)
+
+
+# state sitting in DRAM between steps: nothing in the system reads it back
+# through a checksum, so a silent flip there is invisible until it has
+# already poisoned the computation.  The diskless checkpoint HOLDS enough
+# information to detect/locate a stale flip (re-verify the encode), but no
+# path is wired to do so — the ledger says so instead of pretending.
+register_surface(
+    "state.params_at_rest", owner="repro.chaos.faults", protected=False,
+    note="resident params between steps; ABFT checksums are computed from "
+         "inputs at call time, so a pre-corrupted weight yields consistent "
+         "checksums (garbage in, checksummed garbage out); diskless encode "
+         "could re-verify in principle but is not wired to")
+register_surface(
+    "state.opt_state_at_rest", owner="repro.chaos.faults", protected=False,
+    note="AdamW moments (ZeRO-1 sharded) between steps; same blind spot as "
+         "params_at_rest")
+
+
+# ---------------------------------------------------------------------------
+# the FaultSpec taxonomy
+# ---------------------------------------------------------------------------
+
+
+KINDS = ("sdc_collective", "checksum_state_flip", "dram_params",
+         "dram_opt_state", "dram_kv_cache", "shard_loss", "pod_loss",
+         "slow_pod")
+
+# kind -> which workloads can drill it and which surface it targets
+_KIND_INFO = {
+    "sdc_collective": dict(
+        workloads=("train", "serve"),
+        surface={"train": "dist.collectives/abft_psum",
+                 "serve": "serve.engine/logits_reduce"}),
+    "checksum_state_flip": dict(
+        workloads=("train",), surface="kernels.ops/acc_state"),
+    "dram_params": dict(
+        workloads=("train", "serve"), surface="state.params_at_rest"),
+    "dram_opt_state": dict(
+        workloads=("train",), surface="state.opt_state_at_rest"),
+    "dram_kv_cache": dict(
+        workloads=("serve",), surface="serve.engine/kv_cache_at_rest"),
+    "shard_loss": dict(
+        workloads=("train",), surface="ckpt.diskless/shards"),
+    "pod_loss": dict(
+        workloads=("train",), surface="ft.runtime/topology"),
+    "slow_pod": dict(
+        workloads=("train",), surface="ft.runtime/topology"),
+}
+
+
+def kind_surface(kind: str, workload: str) -> str:
+    s = _KIND_INFO[kind]["surface"]
+    return s[workload] if isinstance(s, dict) else s
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One declarative fault: what corrupts, where, when, deterministically.
+
+    ``surface`` defaults to the kind's canonical protection domain (see
+    `kind_surface`); override it to aim the same fault mechanics at a
+    different registered surface.  ``variant`` selects a sub-path where a
+    domain has several recovery rungs (pod_loss: "diskless" forces the
+    rung-3a checksum-solve path via checksum capacity f=2, "disk" the
+    rung-3b restore via f=1).  All fields are plain data — a spec is
+    JSON-round-trippable and hashable, and the seed makes sampled spaces
+    reproducible.
+    """
+    kind: str
+    workload: str            # "train" | "serve"
+    step: int = 2            # step / engine decode step the fault fires at
+    shard: int = 0           # DP or model-axis shard (sdc, shard_loss)
+    pod: int = 0             # pod index (pod_loss, slow_pod)
+    delta: float = 1e4       # additive corruption magnitude (sdc drills)
+    bit: int = 30            # bit index for flip_bit faults (30 = exponent)
+    delay_s: float = 0.05    # injected per-step delay floor (slow_pod)
+    variant: str = ""        # sub-path selector (pod_loss: diskless|disk)
+    seed: int = 0
+    surface: str = ""        # resolved from the kind when empty
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}: expected "
+                             f"one of {KINDS}")
+        if self.workload not in _KIND_INFO[self.kind]["workloads"]:
+            raise ValueError(
+                f"kind {self.kind!r} is not drillable under workload "
+                f"{self.workload!r} (supported: "
+                f"{_KIND_INFO[self.kind]['workloads']})")
+        if not self.surface:
+            object.__setattr__(self, "surface",
+                               kind_surface(self.kind, self.workload))
+
+    @property
+    def name(self) -> str:
+        """Unique within any well-formed space: every field that deviates
+        from its default contributes a suffix, so a cartesian sweep over
+        shards/deltas/bits yields distinguishable names (the artifact's
+        gate lists and test lookups key on this)."""
+        bits = [self.workload, self.kind, f"s{self.step}"]
+        if self.shard:
+            bits.append(f"sh{self.shard}")
+        if self.pod:
+            bits.append(f"p{self.pod}")
+        if self.delta != 1e4:
+            bits.append(f"d{self.delta:g}")
+        if self.bit != 30:
+            bits.append(f"b{self.bit}")
+        if self.variant:
+            bits.append(self.variant)
+        if self.seed:
+            bits.append(f"seed{self.seed}")
+        return ":".join(bits)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    # -- adapters onto the existing drill paths ------------------------------
+    def sdc_plan(self) -> "SDCPlan":
+        """This spec as the one-event `SDCPlan` the existing SDC drill
+        paths (`StepOptions.sdc_inject`, `ServeEngine(sdc=...)`) consume."""
+        if self.kind != "sdc_collective":
+            raise ValueError(f"{self.kind!r} is not an SDC-collective fault")
+        return SDCPlan(((self.step, self.shard, self.delta),))
+
+    def failure_plan(self) -> "FailurePlan":
+        """This spec as the one-event `FailurePlan` driving shard loss."""
+        if self.kind != "shard_loss":
+            raise ValueError(f"{self.kind!r} is not a shard-loss fault")
+        return FailurePlan(((self.step, self.shard),))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpace:
+    """A named, ordered set of `FaultSpec`s to sweep.
+
+    Build one with `default()` (the committed campaign: every kind, both
+    workloads, multi-pod faults included — needs 8 devices), `smoke()`
+    (the single-device subset benches and unit tests run), `cartesian()`
+    (explicit product over the knobs), or `sample()` (seeded subsample of
+    any space).
+    """
+    name: str
+    specs: Tuple[FaultSpec, ...]
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    @classmethod
+    def smoke(cls) -> "FaultSpace":
+        """Six fault classes across both workloads, all single-device
+        drillable (no pod axis needed) — what `benchmarks.bench_chaos`
+        and the classification tests run."""
+        return cls("smoke", (
+            FaultSpec(kind="sdc_collective", workload="train", step=2,
+                      shard=0, delta=1e4),
+            FaultSpec(kind="checksum_state_flip", workload="train", step=1,
+                      bit=30),
+            FaultSpec(kind="dram_params", workload="train", step=2, bit=30),
+            FaultSpec(kind="dram_opt_state", workload="train", step=2,
+                      bit=29),
+            FaultSpec(kind="shard_loss", workload="train", step=3, shard=0),
+            FaultSpec(kind="sdc_collective", workload="serve", step=1,
+                      shard=0, delta=1e4),
+            FaultSpec(kind="dram_kv_cache", workload="serve", step=2,
+                      bit=30),
+        ))
+
+    @classmethod
+    def default(cls) -> "FaultSpace":
+        """The full committed campaign (CAMPAIGN_PR5.json): all eight
+        kinds, both workloads, both pod-loss recovery rungs.  The
+        multi-pod specs need >= 8 devices (the campaign reports them as
+        ``skipped`` rather than crashing when fewer are present)."""
+        return cls("default", cls.smoke().specs + (
+            FaultSpec(kind="sdc_collective", workload="train", step=4,
+                      shard=0, delta=-3e4, seed=1),
+            FaultSpec(kind="sdc_collective", workload="serve", step=3,
+                      shard=1, delta=-3e4, seed=1),
+            FaultSpec(kind="dram_params", workload="serve", step=0, bit=30),
+            FaultSpec(kind="shard_loss", workload="train", step=3, shard=1,
+                      seed=1),
+            FaultSpec(kind="pod_loss", workload="train", step=3,
+                      variant="diskless"),
+            FaultSpec(kind="pod_loss", workload="train", step=3,
+                      variant="disk", seed=1),
+            FaultSpec(kind="slow_pod", workload="train", step=1,
+                      delay_s=0.05),
+        ))
+
+    @classmethod
+    def cartesian(cls, *, name: str = "cartesian",
+                  kinds: Sequence[str] = KINDS,
+                  workloads: Sequence[str] = ("train", "serve"),
+                  steps: Sequence[int] = (2,),
+                  shards: Sequence[int] = (0,),
+                  deltas: Sequence[float] = (1e4,),
+                  bits: Sequence[int] = (30,)) -> "FaultSpace":
+        """The explicit product over the knobs, kind-validity filtered
+        (a kind only appears under workloads that can drill it)."""
+        specs = []
+        for k, w, s, sh, d, b in itertools.product(kinds, workloads, steps,
+                                                   shards, deltas, bits):
+            if w not in _KIND_INFO[k]["workloads"]:
+                continue
+            specs.append(FaultSpec(kind=k, workload=w, step=s, shard=sh,
+                                   delta=d, bit=b))
+        return cls(name, tuple(specs))
+
+    def sample(self, n: int, seed: int = 0) -> "FaultSpace":
+        """A seeded without-replacement subsample (order-preserving)."""
+        if n >= len(self.specs):
+            return self
+        rng = np.random.RandomState(seed)
+        idx = sorted(rng.choice(len(self.specs), size=n, replace=False))
+        return FaultSpace(f"{self.name}-sample{n}-seed{seed}",
+                          tuple(self.specs[i] for i in idx))
+
+
+# ---------------------------------------------------------------------------
+# injection primitives (the ONE implementation every drill path shares)
+# ---------------------------------------------------------------------------
+
+
+def flip_bit(x, flat_index: int, bit: int = 30):
+    """XOR one bit of a float32 array element — the literal fault model.
+
+    Used by drills to produce realistic corruption magnitudes; `bit` 30 is
+    the top exponent bit (catastrophic), ~23-29 exponent, <23 mantissa.
+    """
+    x = jnp.asarray(x)
+    assert x.dtype == jnp.float32, "bit-flip model is defined on float32"
+    flat = x.reshape(-1)
+    word = jax.lax.bitcast_convert_type(flat[flat_index], jnp.uint32)
+    word = word ^ jnp.uint32(1 << bit)
+    return flat.at[flat_index].set(
+        jax.lax.bitcast_convert_type(word, jnp.float32)).reshape(x.shape)
+
+
+def scatter_delta(extent: int, shard, delta) -> jax.Array:
+    """``[extent]`` fp32 vector carrying `delta` at index `shard`, zero
+    elsewhere — the caller-side shard selection for drills into manual
+    regions where `lax.axis_index` cannot lower (pinned jax 0.4.37
+    rejects PartitionId in partial-manual shard_map; see ROADMAP "jax
+    uprev").  `shard`/`delta` may be traced scalars, so one compiled
+    drill program serves every planned event."""
+    return jnp.zeros((extent,), jnp.float32).at[shard].add(
+        jnp.asarray(delta, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# shard-erasure injection — the paper's §4.3 "process killer"
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Deterministic plan: at step s, lose DP shard i (the paper's fixed
+    EXIT-point mode, 'the most practical and reproducible approach')."""
+    events: Tuple[Tuple[int, int], ...]   # (step, shard_index)
+
+    @classmethod
+    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0):
+        """The stress-test mode: random in time and location (§4.3)."""
+        rng = np.random.RandomState(seed)
+        ev = tuple(sorted(
+            (int(rng.randint(1, max_step)), int(rng.randint(0, p)))
+            for _ in range(n_events)))
+        return cls(ev)
+
+
+class FailureInjector:
+    """Drives a `FailurePlan` through a training loop: `check(step)` fires
+    each planned event exactly once and returns the lost DP shard's index,
+    and `damage(state, shard, leading)` applies the consequence — the
+    shard's slice of every ``[p, ...]``-stacked floating leaf is
+    NaN-poisoned, exactly what a recovery path must repair.  Host-side and
+    framework-agnostic: it never enters compiled code, so plans can fire
+    against any step function (see `ft.runtime.FTRuntime.step`)."""
+
+    def __init__(self, plan: FailurePlan):
+        self.plan = plan
+        self._fired: List[Tuple[int, int]] = []
+
+    def check(self, step: int) -> Optional[int]:
+        """Returns the failed shard index if a failure fires at `step`."""
+        for (s, i) in self.plan.events:
+            if s == step and (s, i) not in self._fired:
+                self._fired.append((s, i))
+                return i
+        return None
+
+    @staticmethod
+    def damage(state, shard: int, leading: int):
+        """NaN-poison shard `shard` of every [p, ...] stacked leaf."""
+        def hit(x):
+            if x.ndim >= 1 and x.shape[0] == leading:
+                return x.at[shard].set(jnp.asarray(jnp.nan, x.dtype)) \
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x
+            return x
+        return jax.tree.map(hit, state)
+
+
+# ---------------------------------------------------------------------------
+# Silent data corruption (SDC): the paper's bit-flip fault model.  Unlike a
+# shard loss (erasure), an SDC leaves no platform signal — only the ABFT
+# checksums (core.abft_gemm in the matmuls, dist.collectives.abft_psum in
+# the gradient reduction) can see it.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SDCPlan:
+    """Deterministic SDC schedule: at step s, shard i's contribution to the
+    gradient reduction is corrupted by `delta` (a flipped high mantissa /
+    exponent bit shows up as a large additive error).
+
+    A step may carry SEVERAL events — two bit flips landing in two different
+    reductions of the same compiled step (the multi-collective fault model).
+    `events_at(step)` groups them; `SDCInjector.check_all` delivers them."""
+    events: Tuple[Tuple[int, int, float], ...]   # (step, dp_shard, delta)
+
+    def events_at(self, step: int) -> Tuple[Tuple[int, float], ...]:
+        """All (shard, delta) payloads planned for `step`, in plan order."""
+        return tuple((i, d) for (s, i, d) in self.events if s == step)
+
+    @classmethod
+    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0,
+               magnitude: float = 1e3):
+        """Random in time and location (§4.3 stress mode) with at most one
+        event per step, so each drill step carries exactly one fault — the
+        multi-fault-per-step case is built deliberately, not sampled."""
+        rng = np.random.RandomState(seed)
+        n_events = min(n_events, max_step - 1)
+        steps = rng.choice(np.arange(1, max_step), size=n_events,
+                           replace=False)
+        ev = tuple(sorted(
+            (int(s), int(rng.randint(0, p)),
+             float(magnitude * rng.choice([-1.0, 1.0])))
+            for s in steps))
+        return cls(ev)
+
+
+class SDCInjector:
+    """Drives an `SDCPlan`: `check(step)` fires each planned event once,
+    returning ``(shard, delta)`` for the consumer to thread into a
+    checksum-protected collective — `train.step` passes it to
+    `dist.collectives.abft_psum_tree` via ``StepOptions.sdc_inject``
+    (compile-time static there: one pre-built step per planned event), and
+    `serve.engine` passes it as *traced* scalars to its drill program, so
+    ONE compiled decode variant serves every planned (shard, delta).  The
+    injection lands after the contribution's checksums are taken — a
+    transient fault on the wire, the paper's bit-flip model — and only the
+    riding checksums can see it."""
+
+    def __init__(self, plan: SDCPlan):
+        self.plan = plan
+        self._fired: List[Tuple[int, int, float]] = []
+
+    def check(self, step: int) -> Optional[Tuple[int, float]]:
+        """Returns (shard, delta) if an SDC event fires at `step` — the
+        single-fault consumer API (fires one event per call; a plan with
+        several same-step events hands them out one call at a time)."""
+        for (s, i, d) in self.plan.events:
+            if s == step and (s, i, d) not in self._fired:
+                self._fired.append((s, i, d))
+                return i, d
+        return None
+
+    def check_all(self, step: int) -> Tuple[Tuple[int, float], ...]:
+        """Fire and return EVERY unfired event planned for `step` — the
+        multi-collective fault model: each payload lands in a different
+        protected reduction of the same compiled step (see
+        `dist.collectives.abft_psum_tree(inject=...)` which spreads a
+        sequence of events over distinct leaves)."""
+        out = []
+        for (s, i, d) in self.plan.events:
+            if s == step and (s, i, d) not in self._fired:
+                self._fired.append((s, i, d))
+                out.append((i, d))
+        return tuple(out)

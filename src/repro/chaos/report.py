@@ -1,0 +1,168 @@
+"""Coverage-matrix artifact: fault class x protection domain -> outcomes.
+
+Turns a `CampaignResult` into the machine-readable JSON the CI gate
+asserts on (zero ``missed`` inside protected domains, zero false alarms)
+and a rendered markdown table for humans.  The artifact always carries the
+**uncovered-surface ledger**: every registered surface with no protection,
+whether or not the campaign drilled it — flash-attention, layernorm, the
+embedding gather, and the *_at_rest state surfaces are reported as
+uncovered, not silently skipped.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.chaos.faults import ensure_registered, uncovered_surfaces
+
+__all__ = ["coverage_matrix", "summarize", "ledger", "campaign_dict",
+           "render_markdown"]
+
+SCHEMA = "repro.chaos.campaign/v1"
+
+OUTCOMES = ("corrected", "detected", "missed", "false_alarm", "clean",
+            "skipped")
+
+
+def _latency_stats(lats: List[float]) -> Dict[str, float]:
+    if not lats:
+        return {}
+    return {"n": len(lats), "mean_s": sum(lats) / len(lats),
+            "max_s": max(lats)}
+
+
+def coverage_matrix(results) -> dict:
+    """``{kind: {surface: {outcome counts, workloads, rungs, latency}}}``.
+
+    One cell per (fault class, protection domain) pair that was actually
+    drilled; clean sweeps aggregate under kind "clean_sweep".
+    """
+    matrix: dict = {}
+    for r in results:
+        cell = matrix.setdefault(r.kind, {}).setdefault(r.surface, {
+            "protected": r.protected, "promise": r.promise,
+            "outcomes": {o: 0 for o in OUTCOMES}, "workloads": [],
+            "rungs": [], "recovery_latency": [], "events": 0})
+        cell["outcomes"][r.outcome] += 1
+        cell["events"] += 1
+        if r.workload not in cell["workloads"]:
+            cell["workloads"].append(r.workload)
+        if r.rung and r.rung not in cell["rungs"]:
+            cell["rungs"].append(r.rung)
+        if r.recovery_latency_s is not None:
+            cell["recovery_latency"].append(r.recovery_latency_s)
+    for kind in matrix.values():
+        for cell in kind.values():
+            cell["recovery_latency"] = _latency_stats(
+                cell.pop("recovery_latency"))
+    return matrix
+
+
+def summarize(results) -> dict:
+    by_outcome = {o: 0 for o in OUTCOMES}
+    for r in results:
+        by_outcome[r.outcome] += 1
+    missed_protected = [r.name for r in results
+                        if r.outcome == "missed" and r.protected]
+    false_alarms = [r.name for r in results if r.outcome == "false_alarm"]
+    injected = [r for r in results
+                if r.kind not in ("clean_sweep",) and r.outcome != "skipped"]
+    kinds = sorted({r.kind for r in injected})
+    workloads = sorted({r.workload for r in results})
+    return {
+        "n_events": len(results),
+        "n_fault_kinds": len(kinds),
+        "fault_kinds": kinds,
+        "workloads": workloads,
+        "by_outcome": by_outcome,
+        "missed_in_protected_domains": missed_protected,
+        "false_alarms": false_alarms,
+    }
+
+
+def ledger(results) -> List[dict]:
+    """The uncovered-surface ledger, annotated with what the campaign
+    actually observed on each (drilled + the resulting outcome, or an
+    explicit "not drilled")."""
+    ensure_registered()
+    drilled: Dict[str, List[str]] = {}
+    for r in results:
+        if r.spec is not None:
+            drilled.setdefault(r.surface, []).append(r.outcome)
+    rows = []
+    for s in uncovered_surfaces():
+        outcomes = drilled.get(s.name)
+        rows.append({
+            "surface": s.name,
+            "owner": s.owner,
+            "note": s.note,
+            "drilled": bool(outcomes),
+            "observed_outcomes": sorted(set(outcomes)) if outcomes else [],
+            "status": ("confirmed unprotected: injected faults classify as "
+                       + "/".join(sorted(set(outcomes)))
+                       if outcomes else
+                       "not drilled this campaign — unprotected by "
+                       "registry declaration"),
+        })
+    return rows
+
+
+def campaign_dict(res) -> dict:
+    """The full machine-readable artifact (CAMPAIGN_PR5.json)."""
+    return {
+        "schema": SCHEMA,
+        "space": res.space,
+        "meta": res.meta,
+        "summary": summarize(res.results),
+        "matrix": coverage_matrix(res.results),
+        "uncovered_surfaces": ledger(res.results),
+        "events": [r.asdict() for r in res.results],
+    }
+
+
+def _fmt_lat(cell) -> str:
+    st = cell["recovery_latency"]
+    if not st:
+        return "—"
+    return f"{st['mean_s'] * 1e3:.1f}ms"
+
+
+def render_markdown(res) -> str:
+    """Human-readable coverage matrix + ledger."""
+    matrix = coverage_matrix(res.results)
+    summ = summarize(res.results)
+    lines = [
+        f"# Chaos campaign `{res.space}`",
+        "",
+        f"{summ['n_events']} events over workloads "
+        f"{', '.join(summ['workloads'])} — "
+        f"{summ['n_fault_kinds']} fault kinds; outcomes: "
+        + ", ".join(f"{k}={v}" for k, v in summ["by_outcome"].items()
+                    if v),
+        "",
+        "| fault kind | surface | protected | workloads | corrected | "
+        "detected | missed | false alarm | rung(s) | recovery latency |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for kind in sorted(matrix):
+        for surface in sorted(matrix[kind]):
+            c = matrix[kind][surface]
+            o = c["outcomes"]
+            lines.append(
+                f"| {kind} | {surface} | "
+                f"{'yes' if c['protected'] else 'NO'} | "
+                f"{'+'.join(c['workloads'])} | {o['corrected']} | "
+                f"{o['detected']} | {o['missed']} | {o['false_alarm']} | "
+                f"{', '.join(c['rungs']) or '—'} | {_fmt_lat(c)} |")
+    lines += ["", "## Uncovered-surface ledger", ""]
+    for row in ledger(res.results):
+        lines.append(f"- **{row['surface']}** — {row['status']}. "
+                     f"{row['note']}")
+    mp = summ["missed_in_protected_domains"]
+    fa = summ["false_alarms"]
+    lines += [
+        "",
+        f"**Protected-domain misses:** {mp if mp else 'none'}  ",
+        f"**False alarms:** {fa if fa else 'none'}",
+        "",
+    ]
+    return "\n".join(lines)

@@ -32,10 +32,27 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.chaos.faults import register_surface
 from repro.core.checksum import checkpoint_matrix
 from repro.kernels import ops
 
 __all__ = ["DisklessCheckpoint"]
+
+# the protection domain this module owns (repro.chaos campaigns drill it):
+# ERASURE of up to f known-failed DP shards.  Detection is the platform's
+# job (slice health / barrier timeout) — the checksums recover, they do
+# not detect, which is why a *silent* DRAM flip in the same state is a
+# separate, unprotected surface (state.params_at_rest in the ledger).
+register_surface(
+    "ckpt.diskless/shards", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="platform failure signal (simulated by FailureInjector); "
+             "recovery solves the lost shards from the rotated weighted "
+             "checksums at the last encode point (bounded rollback)",
+    kinds=("shard_loss",),
+    note="the f x f checksum solve is float arithmetic: recovered shards "
+         "are near-exact, survivors roll back bit-exactly to their local "
+         "snapshot")
 
 
 class DisklessCheckpoint:

@@ -77,7 +77,9 @@ def recover(
         raise ValueError(
             f"{f_used} failures but only {a.shape[0]} checksums available"
         )
-    ok = jnp.asarray([i for i in range(p) if i not in failed])
+    # int dtype even when EVERY shard failed (p <= f): an empty survivor
+    # list would otherwise default to float32 and break the gather below
+    ok = jnp.asarray([i for i in range(p) if i not in failed], jnp.int32)
     failed_idx = jnp.asarray(failed)
     flat = shards.reshape(p, -1).astype(jnp.float32)
     y = checksums.reshape(checksums.shape[0], -1).astype(jnp.float32)

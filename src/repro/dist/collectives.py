@@ -33,7 +33,25 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.chaos.faults import register_surface
+
 __all__ = ["ef_psum_tree", "abft_psum", "abft_psum_tree", "ef_wire_bytes"]
+
+# the protection domain this module owns, visible to repro.chaos campaigns:
+# checksums riding the reduction see a corruption of the reduction itself —
+# they cannot see garbage that was already in the contribution when its
+# checksums were taken (that blind spot is the *_at_rest ledger entries)
+register_surface(
+    "dist.collectives/abft_psum", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="Huang-Abraham row/column checksums packed into the same psum "
+             "(linearity residual); single corrupted element located "
+             "exactly, repaired by subtracting the row residual",
+    kinds=("sdc_collective",),
+    note="repair is a float subtraction of the residual: near-exact "
+         "(~ulp(delta)), not bit-exact — the train-side promise is "
+         "tolerance; the serving engine's argmax token stream absorbs it "
+         "to bit-identity (see serve.engine/logits_reduce)")
 
 
 def _axis_tuple(axes):

@@ -1,164 +1,16 @@
-"""Failure injection — the paper's §4.3 "process killer", deterministic or
-randomized.
+"""Failure injection — back-compat shim over `repro.chaos.faults`.
 
-On real pods, failure *detection* comes from the platform (slice health /
-barrier timeout); this module simulates the *consequence*: a DP shard of the
-registered state is lost (NaN-poisoned) at a chosen step, so the recovery
-paths (diskless checksum solve, disk restore, elastic re-mesh) are exercised
-end-to-end by tests and examples exactly as the paper's stress test
-exercises FT-MPI.
+The injector implementations (`FailurePlan`/`FailureInjector` for shard
+erasure, `SDCPlan`/`SDCInjector` for silent data corruption, and the
+`flip_bit` primitive) moved to `repro.chaos.faults`, where they sit behind
+the declarative `FaultSpec` taxonomy and the protection-surface registry
+that `repro.chaos.campaign` sweeps.  Every existing import path through
+this module keeps working; new code should prefer `repro.chaos`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.chaos.faults import (FailureInjector, FailurePlan, SDCInjector,
+                                SDCPlan, flip_bit, scatter_delta)
 
 __all__ = ["FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
-           "flip_bit"]
-
-
-@dataclasses.dataclass(frozen=True)
-class FailurePlan:
-    """Deterministic plan: at step s, lose DP shard i (the paper's fixed
-    EXIT-point mode, 'the most practical and reproducible approach')."""
-    events: Tuple[Tuple[int, int], ...]   # (step, shard_index)
-
-    @classmethod
-    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0):
-        """The stress-test mode: random in time and location (§4.3)."""
-        rng = np.random.RandomState(seed)
-        ev = tuple(sorted(
-            (int(rng.randint(1, max_step)), int(rng.randint(0, p)))
-            for _ in range(n_events)))
-        return cls(ev)
-
-
-class FailureInjector:
-    """Drives a `FailurePlan` through a training loop: `check(step)` fires
-    each planned event exactly once and returns the lost DP shard's index,
-    and `damage(state, shard, leading)` applies the consequence — the
-    shard's slice of every ``[p, ...]``-stacked floating leaf is
-    NaN-poisoned, exactly what a recovery path must repair.  Host-side and
-    framework-agnostic: it never enters compiled code, so plans can fire
-    against any step function (see `ft.runtime.FTRuntime.step`)."""
-
-    def __init__(self, plan: FailurePlan):
-        self.plan = plan
-        self._fired: List[Tuple[int, int]] = []
-
-    def check(self, step: int) -> Optional[int]:
-        """Returns the failed shard index if a failure fires at `step`."""
-        for (s, i) in self.plan.events:
-            if s == step and (s, i) not in self._fired:
-                self._fired.append((s, i))
-                return i
-        return None
-
-    @staticmethod
-    def damage(state, shard: int, leading: int):
-        """NaN-poison shard `shard` of every [p, ...] stacked leaf."""
-        def hit(x):
-            if x.ndim >= 1 and x.shape[0] == leading:
-                return x.at[shard].set(jnp.asarray(jnp.nan, x.dtype)) \
-                    if jnp.issubdtype(x.dtype, jnp.floating) else x
-            return x
-        return jax.tree.map(hit, state)
-
-
-# ---------------------------------------------------------------------------
-# Silent data corruption (SDC): the paper's bit-flip fault model.  Unlike a
-# shard loss (erasure), an SDC leaves no platform signal — only the ABFT
-# checksums (core.abft_gemm in the matmuls, dist.collectives.abft_psum in
-# the gradient reduction) can see it.
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class SDCPlan:
-    """Deterministic SDC schedule: at step s, shard i's contribution to the
-    gradient reduction is corrupted by `delta` (a flipped high mantissa /
-    exponent bit shows up as a large additive error).
-
-    A step may carry SEVERAL events — two bit flips landing in two different
-    reductions of the same compiled step (the multi-collective fault model).
-    `events_at(step)` groups them; `SDCInjector.check_all` delivers them."""
-    events: Tuple[Tuple[int, int, float], ...]   # (step, dp_shard, delta)
-
-    def events_at(self, step: int) -> Tuple[Tuple[int, float], ...]:
-        """All (shard, delta) payloads planned for `step`, in plan order."""
-        return tuple((i, d) for (s, i, d) in self.events if s == step)
-
-    @classmethod
-    def random(cls, n_events: int, max_step: int, p: int, seed: int = 0,
-               magnitude: float = 1e3):
-        """Random in time and location (§4.3 stress mode) with at most one
-        event per step, so each drill step carries exactly one fault — the
-        multi-fault-per-step case is built deliberately, not sampled."""
-        rng = np.random.RandomState(seed)
-        n_events = min(n_events, max_step - 1)
-        steps = rng.choice(np.arange(1, max_step), size=n_events,
-                           replace=False)
-        ev = tuple(sorted(
-            (int(s), int(rng.randint(0, p)),
-             float(magnitude * rng.choice([-1.0, 1.0])))
-            for s in steps))
-        return cls(ev)
-
-
-class SDCInjector:
-    """Drives an `SDCPlan`: `check(step)` fires each planned event once,
-    returning ``(shard, delta)`` for the consumer to thread into a
-    checksum-protected collective — `train.step` passes it to
-    `dist.collectives.abft_psum_tree` via ``StepOptions.sdc_inject``
-    (compile-time static there: one pre-built step per planned event), and
-    `serve.engine` passes it as *traced* scalars to its drill program, so
-    ONE compiled decode variant serves every planned (shard, delta).  The
-    injection lands after the contribution's checksums are taken — a
-    transient fault on the wire, the paper's bit-flip model — and only the
-    riding checksums can see it."""
-
-    def __init__(self, plan: SDCPlan):
-        self.plan = plan
-        self._fired: List[Tuple[int, int, float]] = []
-
-    def check(self, step: int) -> Optional[Tuple[int, float]]:
-        """Returns (shard, delta) if an SDC event fires at `step` — the
-        single-fault consumer API (fires one event per call; a plan with
-        several same-step events hands them out one call at a time)."""
-        for (s, i, d) in self.plan.events:
-            if s == step and (s, i, d) not in self._fired:
-                self._fired.append((s, i, d))
-                return i, d
-        return None
-
-    def check_all(self, step: int) -> Tuple[Tuple[int, float], ...]:
-        """Fire and return EVERY unfired event planned for `step` — the
-        multi-collective fault model: each payload lands in a different
-        protected reduction of the same compiled step (see
-        `dist.collectives.abft_psum_tree(inject=...)` which spreads a
-        sequence of events over distinct leaves)."""
-        out = []
-        for (s, i, d) in self.plan.events:
-            if s == step and (s, i, d) not in self._fired:
-                self._fired.append((s, i, d))
-                out.append((i, d))
-        return tuple(out)
-
-
-def flip_bit(x, flat_index: int, bit: int = 30):
-    """XOR one bit of a float32 array element — the literal fault model.
-
-    Used by drills to produce realistic corruption magnitudes; `bit` 30 is
-    the top exponent bit (catastrophic), ~23-29 exponent, <23 mantissa.
-    """
-    x = jnp.asarray(x)
-    assert x.dtype == jnp.float32, "bit-flip model is defined on float32"
-    flat = x.reshape(-1)
-    word = jax.lax.bitcast_convert_type(flat[flat_index], jnp.uint32)
-    word = word ^ jnp.uint32(1 << bit)
-    return flat.at[flat_index].set(
-        jax.lax.bitcast_convert_type(word, jnp.float32)).reshape(x.shape)
+           "flip_bit", "scatter_delta"]

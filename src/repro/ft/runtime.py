@@ -47,11 +47,29 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.chaos.faults import register_surface
 from repro.ckpt.diskless import DisklessCheckpoint
 from repro.ft.failures import FailureInjector, SDCInjector
 
 __all__ = ["FTPolicy", "FTRuntime", "ElasticRuntime", "MeshGeneration",
-           "ElasticReport", "stack_view", "unstack_view"]
+           "ElasticReport", "StragglerDetector", "stack_view",
+           "unstack_view"]
+
+# the protection domain this module owns (repro.chaos campaigns drill it):
+# TOPOLOGY faults — a pod that is gone (platform-signaled) or a pod that is
+# merely persistently slow (step-time EWMA straggler detector) — handled by
+# the rung-3 elastic shrink/re-grow ladder.
+register_surface(
+    "ft.runtime/topology", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="pod loss: platform failure signal; slow pod: per-pod "
+             "step-time EWMA exceeding slow_pod_threshold x the median "
+             "(StragglerDetector) — both demote through lose_pod()",
+    kinds=("pod_loss", "slow_pod"),
+    note="rung 3b (disk restore) resumes bit-identically (PR 4 drill); "
+         "rung 3a (diskless checksum solve) is near-exact, hence the "
+         "tolerance promise; demotion rolls back to the last checkpoint "
+         "and replays deterministically")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,11 +80,15 @@ class FTPolicy:
     fallback when more than `f` shards die at once); `f` the simultaneous
     failures the diskless encoding survives (paper's checksum capacity);
     `slow_pod_threshold` demotes a pod persistently slower than this
-    multiple of the median step time via the elastic path."""
+    multiple of the median step time via the elastic path (EWMA-smoothed:
+    `straggler_alpha` is the smoothing factor, `straggler_warmup` the
+    per-pod observations required before the detector may trip)."""
     diskless_every: int = 10       # encode cadence (steps)
     disk_every: int = 100          # async disk snapshot cadence
     f: int = 1                     # simultaneous failures survivable
-    slow_pod_threshold: float = 3.0  # x median step time -> demote pod
+    slow_pod_threshold: float = 3.0  # x median step-time EWMA -> demote pod
+    straggler_alpha: float = 0.5   # EWMA smoothing of per-pod step times
+    straggler_warmup: int = 3      # observations before the detector trips
 
 
 def stack_view(state, p: int):
@@ -165,6 +187,53 @@ class FTRuntime:
 
 
 # ---------------------------------------------------------------------------
+# straggler detection: per-pod step-time EWMA
+# ---------------------------------------------------------------------------
+
+
+class StragglerDetector:
+    """Per-pod step-time EWMA; trips when one pod's EWMA exceeds
+    ``threshold`` x the median EWMA of the OTHER pods.
+
+    Synchronous SPMD means the global step runs at the slowest pod's pace,
+    so per-pod walls come from a heartbeat (each pod's host callback
+    reports its own step wall; `ElasticRuntime.train_step` synthesizes a
+    uniform heartbeat when none is installed).  The EWMA smooths one-off
+    hiccups away — only a *persistently* slow pod trips, and only after
+    `warmup` observations — and the median baseline keeps a uniformly
+    slow fleet (everyone sharing a slow step) from self-demoting.
+    """
+
+    def __init__(self, n_pods: int, threshold: float, *,
+                 alpha: float = 0.5, warmup: int = 3):
+        self.n_pods = n_pods
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma = [None] * n_pods
+        self.observations = 0
+
+    def observe(self, walls) -> Optional[int]:
+        """Feed one step's per-pod walls; returns the pod to demote (the
+        worst offender) or None.  Never trips with fewer than 2 pods."""
+        if len(walls) != self.n_pods:
+            raise ValueError(f"expected {self.n_pods} pod walls, got "
+                             f"{len(walls)}")
+        a = self.alpha
+        self.ewma = [w if e is None else a * w + (1 - a) * e
+                     for e, w in zip(self.ewma, walls)]
+        self.observations += 1
+        if self.n_pods < 2 or self.observations < self.warmup:
+            return None
+        worst = max(range(self.n_pods), key=lambda i: self.ewma[i])
+        others = sorted(e for i, e in enumerate(self.ewma) if i != worst)
+        median = others[len(others) // 2]
+        if median > 0 and self.ewma[worst] > self.threshold * median:
+            return worst
+        return None
+
+
+# ---------------------------------------------------------------------------
 # elastic runtime: versioned mesh generations + the full ladder
 # ---------------------------------------------------------------------------
 
@@ -251,9 +320,16 @@ class ElasticRuntime(FTRuntime):
                          sdc_injector=sdc_injector)
         self.gen = gen
         self.recoveries["elastic"] = 0
+        self.recoveries["demote"] = 0
         self.data_cfg = data_cfg or DataConfig(
             cfg.vocab_size, shape.seq_len, shape.global_batch)
         self.pipe = DataPipeline(self.data_cfg, split=gen.split)
+        # straggler path: `pod_heartbeat(step, wall) -> per-pod walls` is
+        # each pod's host callback reporting its own step time (drills
+        # inject a delay into one pod's callback — chaos FaultSpec
+        # kind="slow_pod"); None = synthesize a uniform heartbeat
+        self.pod_heartbeat = None
+        self._straggler = self._fresh_straggler(gen.mesh)
 
     # -- generation lifecycle ------------------------------------------------
 
@@ -323,13 +399,44 @@ class ElasticRuntime(FTRuntime):
             {k: jnp.asarray(v) for k, v in self.pipe.batch_at(step).items()},
             self.gen.in_shardings[1])
 
+    def _fresh_straggler(self, mesh) -> StragglerDetector:
+        return StragglerDetector(
+            mesh.shape.get("pod", 1), self.policy.slow_pod_threshold,
+            alpha=self.policy.straggler_alpha,
+            warmup=self.policy.straggler_warmup)
+
     def train_step(self, step_idx: int, state):
-        """Run step `step_idx` under the current generation."""
+        """Run step `step_idx` under the current generation.  Feeds the
+        per-pod heartbeat into the straggler detector; poll
+        `maybe_straggler()` after the step and demote via `demote_pod`."""
         batch = self.place_batch(step_idx)
         t0 = time.time()
         state, metrics = self.gen.step_fn(state, batch)
-        self.step_times.append(time.time() - t0)
+        wall = time.time() - t0
+        self.step_times.append(wall)
+        n_pods = self._straggler.n_pods
+        walls = (self.pod_heartbeat(step_idx, wall)
+                 if self.pod_heartbeat is not None else [wall] * n_pods)
+        self._slow_pod = self._straggler.observe(walls)
         return state, metrics
+
+    def maybe_straggler(self) -> Optional[int]:
+        """The pod the EWMA detector wants demoted (None = all healthy)."""
+        return getattr(self, "_slow_pod", None)
+
+    def demote_pod(self, state, pod: int):
+        """Demote a persistently slow pod through the elastic rung: the
+        1000-node answer is to DROP it and keep the batch — `lose_pod()`
+        shrinks onto the survivor mesh exactly as if the pod had died
+        (rollback to the last checkpoint, reshard, replay), and the
+        returned `ElasticReport` carries the cost.  `pod` is the detector's
+        index (symbolic on this substrate: the survivor mesh shrinks the
+        pod axis; on a real fleet it names the slice to drain).  Returns
+        ``(state, rollback_step, report)``."""
+        state, rollback, report = self.lose_pod(state)
+        self.recoveries["demote"] += 1
+        self._slow_pod = None
+        return state, rollback, report
 
     def checkpoint(self, step: int, state):
         """Cadenced rung-2/3 state capture: diskless over the stacked view,
@@ -379,6 +486,9 @@ class ElasticRuntime(FTRuntime):
         self.gen = gen
         self.p = gen.dp_extent
         self.pipe = self.pipe.resplit(gen.split, at_step=at_step)
+        # pod count changed: stale EWMAs would misattribute; start fresh
+        self._straggler = self._fresh_straggler(gen.mesh)
+        self._slow_pod = None
 
     def lose_pod(self, state, failed_pods: int = 1):
         """Rung 3: a pod is gone.  Shrink onto the survivor mesh.

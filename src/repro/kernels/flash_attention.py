@@ -24,9 +24,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.chaos.faults import register_surface
+
 __all__ = ["flash_attention_pallas"]
 
 NEG_INF = -1e30
+
+# honest ledger entry for repro.chaos: attention has NO checksum family —
+# the Huang-Abraham linearity the GEMM/collective protections rely on does
+# not survive the softmax nonlinearity, so a flip in the online-softmax
+# (m, l, acc) state or in Q/K/V mid-sweep is invisible today
+register_surface(
+    "kernels.flash_attention", owner=__name__, protected=False,
+    note="online-softmax VMEM state and the attention math are outside "
+         "every checksum envelope: ABFT linearity does not survive the "
+         "softmax; an SDC here propagates to the output undetected")
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.chaos.faults import register_surface
 from repro.kernels import ref
 from repro.kernels.abft_matmul import (STATS_WIDTH, abft_matmul_acc_pallas,
                                        abft_matmul_pallas)
@@ -37,6 +38,22 @@ __all__ = [
 ]
 
 KERNEL_F = 2  # checksums per direction: plain sum + one weighted row
+
+# the protection domain this module owns (repro.chaos campaigns drill it):
+# the carried (ccol, crow) per-tile state of the accumulate kernel family
+register_surface(
+    "kernels.ops/acc_state", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="fused verify/correct prologue of abft_matmul_acc: per-tile "
+             "residual of recomputed vs carried dual checksums; "
+             "concentration-gated single-element repair by masked "
+             "re-computation from the carried plain-sum column checksum",
+    kinds=("sdc_collective", "checksum_state_flip"),
+    note="a flip in the carried DATA is located and repaired (bit-exact on "
+         "integer data); a flip in the carried CHECKSUM state trips only "
+         "one residual family, so it is detected but deliberately NOT "
+         "repaired (repairing would corrupt healthy data) — refresh via "
+         "tile_checksums instead")
 
 
 def on_tpu() -> bool:
@@ -53,6 +70,17 @@ def kernel_weights(m: int, f: int = KERNEL_F, dtype=jnp.float32) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 _CANDIDATE_BLOCKS = (128, 256, 512)
+
+# MXU-work term of the tiling cost model, in FLOPs per HBM-byte-equivalent.
+# The kernels accumulate in fp32, and fp32 matmul on the TPU MXU runs as a
+# multi-pass bf16 emulation at roughly 1/8 of bf16 peak (~275/8 ~ 34
+# Tflop/s against ~1.2 TB/s HBM on a v4-class part), so one HBM byte buys
+# ~28 fp32 FLOPs.  Scoring padded FLOPs at this rate stops small ragged
+# shapes from trading up to ~50% extra MXU work for a few saved HBM
+# re-streams (the 384x640x896 regression in tests/test_kernels.py) while
+# leaving exactly-tileable shapes untouched (their padded FLOPs are equal
+# across candidates, so the byte ordering decides as before).
+MXU_FP32_FLOPS_PER_BYTE = 28.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,8 +184,14 @@ def pick_blocks(
     """Plan the cheapest MXU-aligned tiling for an (m, k, n) ABFT-GEMM.
 
     Candidate (bm, bn, bk) tilings are scored by ``plan_accounting``'s
-    modeled HBM bytes on the zero-padded dims, so padding waste is priced
-    in.  Tilings whose working set (double-buffered A/B streams, fp32
+    modeled HBM bytes on the zero-padded dims PLUS the padded MXU work
+    converted to byte-equivalents at ``MXU_FP32_FLOPS_PER_BYTE`` — bytes
+    price the re-streams, the FLOP term prices the padding waste, so the
+    planner no longer buys fewer HBM passes with up to ~50% extra MXU work
+    on small ragged shapes.  ``cost_bytes`` on the returned plan stays the
+    pure byte cost (``plan_accounting``'s ``total_bytes``), so bench
+    accounting is unchanged.  Tilings whose working set (double-buffered
+    A/B streams, fp32
     accumulator, C_in tile when ``carry``, weight/checksum tiles) exceeds
     ``vmem_budget`` are discarded.  ``require_exact`` restricts the search
     to tilings that divide (m, k, n) with no padding — callers that keep a
@@ -179,11 +213,15 @@ def pick_blocks(
                     continue
                 cand = BlockPlan(m=m, k=k, n=n, bm=bm, bn=bn, bk=bk,
                                  pm=pm, pk=pk, pn=pn, cost_bytes=0)
-                cost = plan_accounting(cand, in_bytes=in_bytes,
+                acct = plan_accounting(cand, in_bytes=in_bytes,
                                        out_bytes=out_bytes, f=f,
-                                       carry=carry)["total_bytes"]
+                                       carry=carry)
+                cost = acct["total_bytes"]
+                # score = bytes + MXU work in byte-equivalents: re-streams
+                # and padding waste priced in the same unit
+                score = cost + acct["flops"] / MXU_FP32_FLOPS_PER_BYTE
                 # prefer cheaper traffic; tie-break toward bigger tiles
-                key = (cost, -(bm * bn * bk), -bk)
+                key = (score, -(bm * bn * bk), -bk)
                 if best_key is None or key < best_key:
                     best_key = key
                     best = dataclasses.replace(cand, cost_bytes=cost)

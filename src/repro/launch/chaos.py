@@ -1,0 +1,96 @@
+"""Fault-campaign CLI: sweep a declarative FaultSpace, emit the coverage
+matrix.
+
+The campaign runs every spec of the chosen space against live workloads
+(an `ElasticRuntime` train loop, a drilled `ServeEngine` decode),
+classifies each event as detected / corrected / missed / false-alarm
+against a clean golden run, and writes the machine-readable artifact CI
+gates on (`--json`) plus a rendered markdown matrix on stdout.
+
+Usage (the committed CAMPAIGN_PR5.json is exactly this, 8 host devices so
+the multi-pod specs run instead of reporting `skipped`):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+  python -m repro.launch.chaos --space default --workload both \
+      --json CAMPAIGN_PR5.json
+
+  # single-device subset (what benchmarks/bench_chaos.py runs)
+  PYTHONPATH=src python -m repro.launch.chaos --space smoke --json out.json
+
+``--check`` exits non-zero when a protected domain missed a fault or a
+clean sweep raised a false alarm — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.chaos.campaign import CampaignRunner, TrainConfig
+from repro.chaos.faults import FaultSpace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--space", default="default",
+                    choices=("default", "smoke", "cartesian"),
+                    help="which FaultSpace to sweep")
+    ap.add_argument("--workload", default="both",
+                    choices=("train", "serve", "both"))
+    ap.add_argument("--sample", type=int, default=None, metavar="N",
+                    help="seeded without-replacement subsample of the space")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for --sample")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override train workload steps")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable campaign artifact")
+    ap.add_argument("--markdown", metavar="PATH", default=None,
+                    help="also write the rendered matrix to a file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on protected-domain misses / false alarms "
+                         "/ skipped specs (the CI gate)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    space = {"default": FaultSpace.default, "smoke": FaultSpace.smoke,
+             "cartesian": FaultSpace.cartesian}[args.space]()
+    if args.sample is not None:
+        space = space.sample(args.sample, seed=args.seed)
+    workloads = (("train", "serve") if args.workload == "both"
+                 else (args.workload,))
+    train = TrainConfig() if args.steps is None else TrainConfig(
+        steps=args.steps)
+
+    runner = CampaignRunner(space, train=train, verbose=not args.quiet)
+    res = runner.run(workloads)
+    md = res.markdown()
+    print(md)
+    if args.markdown:
+        with open(args.markdown, "w") as fh:
+            fh.write(md)
+    d = res.to_dict()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(d, fh, indent=1, sort_keys=False)
+        print(f"[chaos] artifact -> {args.json}", file=sys.stderr)
+
+    summ = d["summary"]
+    bad = []
+    if summ["missed_in_protected_domains"]:
+        bad.append(f"protected-domain misses: "
+                   f"{summ['missed_in_protected_domains']}")
+    if summ["false_alarms"]:
+        bad.append(f"false alarms: {summ['false_alarms']}")
+    if args.check and summ["by_outcome"].get("skipped"):
+        bad.append(f"{summ['by_outcome']['skipped']} spec(s) skipped "
+                   "(need more devices?)")
+    if bad:
+        print("[chaos] GATE FAILED: " + "; ".join(bad), file=sys.stderr)
+        if args.check:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

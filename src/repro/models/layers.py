@@ -17,7 +17,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.chaos.faults import register_surface
 from repro.core.abft_gemm import ABFTConfig, abft_matmul, encode_weight
+
+# honest ledger entries for repro.chaos: the non-GEMM layer math carries no
+# checksums.  The projections (linear_apply under abft=) are protected; the
+# elementwise/normalization/gather tissue between them is not.
+register_surface(
+    "models.layers/layernorm", owner=__name__, protected=False,
+    note="RMS/layer normalization is nonlinear (mean/rsqrt): the ABFT "
+         "checksum columns do not commute through it, so a flip in the "
+         "normalized activations is invisible until a later protected "
+         "projection re-checksums already-corrupted inputs")
+register_surface(
+    "models.layers/embedding_gather", owner=__name__, protected=False,
+    note="embed_apply is a gather (jnp.take): no reduction for a checksum "
+         "to ride; a flipped table row or index propagates undetected")
 
 # ---------------------------------------------------------------------------
 # ABFT-protected linear

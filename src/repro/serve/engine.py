@@ -55,15 +55,34 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.chaos.faults import SDCInjector, register_surface, scatter_delta
 from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
 from repro.dist.collectives import abft_psum
-from repro.ft.failures import SDCInjector
 from repro.models import transformer as tf
 from repro.models.layers import softcap_fn
 from repro.train.step import StepOptions
 
 __all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent"]
+
+# the protection domains/surfaces this module owns (repro.chaos drills
+# them): the verified unembed reduction is protected; the KV cache sitting
+# in device memory between decode steps is an honest ledger entry
+register_surface(
+    "serve.engine/logits_reduce", owner=__name__, protected=True,
+    promise="bit_identity",
+    detector="abft_psum checksums riding the row-parallel unembed's "
+             "cross-shard reduction (detect/locate/correct in-flight, "
+             "EngineStats records the event)",
+    kinds=("sdc_collective",),
+    note="promise is on the EMITTED TOKEN STREAM: correction is near-exact "
+         "on logits and the argmax absorbs the residual ulps, so drilled "
+         "outputs are bit-identical to clean (tests/test_serve_drill.py)")
+register_surface(
+    "serve.engine/kv_cache_at_rest", owner=__name__, protected=False,
+    note="batched KV cache between decode steps: attention reads it back "
+         "through no checksum (ABFT linearity dies at the softmax), so a "
+         "DRAM flip there silently steers every later token of that slot")
 
 
 @dataclasses.dataclass
@@ -255,8 +274,14 @@ class ServeEngine:
             req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive until queue + slots drain; returns finished requests."""
+    def run(self, max_steps: int = 10_000, on_step=None) -> List[Request]:
+        """Drive until queue + slots drain; returns finished requests.
+
+        ``on_step(engine, decode_step)`` — called before each decode step
+        with the engine itself — is the chaos-campaign hook: a fault drill
+        mutates engine state (flip a KV-cache or weight bit) mid-flight at
+        a planned step; the engine re-places the mutated arrays before the
+        compiled call as it always does."""
         finished: List[Request] = []
         for _ in range(max_steps):
             self._admit()
@@ -264,6 +289,8 @@ class ServeEngine:
                 if not self.queue:
                     break
                 continue
+            if on_step is not None:
+                on_step(self, self.stats.decode_steps)
             self._step(finished)
         return finished
 
@@ -450,8 +477,8 @@ class ServeEngine:
         args = (w, x)
         if inject is not None:
             shard, delta = inject
-            m_ext = self.mesh.shape[shd.MODEL_AXIS]
-            dvec = jnp.zeros((m_ext,), jnp.float32).at[shard].set(delta)
+            dvec = scatter_delta(self.mesh.shape[shd.MODEL_AXIS], shard,
+                                 delta)
             in_specs += (P(shd.MODEL_AXIS),)
             args += (dvec,)
         out_specs = (P(None, None, None), P(), {k: P() for k in _INFO0})

@@ -108,6 +108,28 @@ def test_block_picker_plans_any_shape():
     assert acct["extra_hbm_rd_col"] == acct["extra_hbm_rd_row"] == 0
 
 
+def test_block_picker_flop_aware_on_small_ragged_shapes():
+    """ROADMAP leftover (PR 2): the pure byte model bought ~52% extra MXU
+    work on 384x640x896 (512-block padding) because padded FLOPs were
+    free.  With the MXU-work term the planner must pick a no-worse plan:
+    strictly fewer padded FLOPs than the byte-only choice at bounded
+    waste, without disturbing exactly-tileable shapes (their padded FLOPs
+    are equal across candidates, so byte ordering still decides)."""
+    plan = ops.pick_blocks(384, 640, 896)
+    assert plan is not None
+    # the byte-only model chose (bm=512): pm*pk*pn = 512*640*1024, 52%
+    # waste; the flop-aware plan must stay well under that
+    byte_only_flops = 2 * 512 * 640 * 1024
+    assert 2 * plan.pm * plan.pk * plan.pn < byte_only_flops
+    assert plan.waste <= 0.15, plan
+    # exactly-tileable shapes: flop term is a constant shift, choice as
+    # before (big tiles win on bytes)
+    big = ops.pick_blocks(2048, 2048, 2048)
+    assert (big.bm, big.bn, big.bk) == (512, 512, 512)
+    ex = ops.pick_blocks(512, 1024, 512)
+    assert ex.exact and ex.waste == 0.0
+
+
 def test_acc_chaining_equals_oneshot(rs):
     """Two accumulate steps over a split k == one-shot GEMM (C + both
     checksum directions), bit-for-bit on fp32 storage."""
