@@ -1,18 +1,18 @@
 """Chaos-campaign smoke rows: the single-device FaultSpace swept end-to-end.
 
-Runs `repro.chaos.campaign.CampaignRunner` over `FaultSpace.smoke()` (six
+Runs `repro.chaos.campaign.CampaignRunner` over `FaultSpace.smoke()` (nine
 fault classes, both workloads, no pod axis needed) and emits one row per
 classified event plus the campaign-level coverage counters.  The counters
-are the contract the full CI campaign gates on — `missed_protected` and
-`false_alarms` must be 0 here too, so a regression in any protection
-domain's detection path shows up in every bench run, not only in the
-8-device chaos-campaign job.
+are the contract the full CI campaign gates on — since PR 6 the ledger is
+retired, so `missed_anywhere`, `false_alarms` AND `uncovered_surfaces`
+must all be 0 here too; a regression in any detection path shows up in
+every bench run, not only in the 8-device chaos-campaign job.
 
 Rows:
   chaos/<event-name>          us = event wall, derived = outcome
   chaos/recovery/<rung>       us = measured recovery latency for that rung
-  chaos/specs | corrected | detected | missed_unprotected |
-  chaos/missed_protected | false_alarms | uncovered_surfaces
+  chaos/specs | corrected | detected | missed_anywhere |
+  chaos/false_alarms | uncovered_surfaces
 """
 
 
@@ -36,9 +36,10 @@ def run():
                          f"rung latency ({ev.kind})"))
     summ = summarize(res.results)
     o = summ["by_outcome"]
-    n_missed_prot = len(summ["missed_in_protected_domains"])
+    n_missed = len(summ["missed_anywhere"])
     n_fa = len(summ["false_alarms"])
     from repro.chaos.faults import uncovered_surfaces
+    n_ledger = len(uncovered_surfaces())
     rows += [
         ("chaos/specs", round(wall * 1e6, 1),
          f"{summ['n_fault_kinds']} fault kinds over "
@@ -47,17 +48,15 @@ def run():
          "within the domain promise"),
         ("chaos/detected", o["detected"], "faults seen but (by design) not "
          "repaired"),
-        ("chaos/missed_unprotected", o["missed"],
-         "faults into ledger surfaces — honest misses"),
-        ("chaos/missed_protected", n_missed_prot,
-         "MUST BE 0: a protected domain let a fault through"),
+        ("chaos/missed_anywhere", n_missed,
+         "MUST BE 0: the ledger is retired — every surface detects"),
         ("chaos/false_alarms", n_fa,
          "MUST BE 0: detections on clean sweeps"),
-        ("chaos/uncovered_surfaces", len(uncovered_surfaces()),
-         "registered surfaces with no protection (the ledger)"),
+        ("chaos/uncovered_surfaces", n_ledger,
+         "MUST BE 0: registered surfaces with no protection"),
     ]
-    if n_missed_prot or n_fa:
+    if n_missed or n_fa or n_ledger:
         raise AssertionError(
-            f"chaos gate: missed_protected={n_missed_prot} "
-            f"false_alarms={n_fa} — {summ}")
+            f"chaos gate: missed_anywhere={n_missed} "
+            f"false_alarms={n_fa} uncovered={n_ledger} — {summ}")
     return rows

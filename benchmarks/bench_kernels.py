@@ -73,4 +73,30 @@ def run():
             f"tpu_roofline_us={max(t_compute,t_memory)*1e6:.1f} "
             f"vmem_kb={vmem//1024} "
             f"blocks=({plan.bm},{plan.bn},{plan.bk})"))
+
+    # -- checksummed flash attention: cost of the epilogue checksum ---------
+    # The recurrence rides the existing p tile: two [bq,bk]@[bk,1] products
+    # (V-column checksum + softmax rowsum) against the kernel's two
+    # [bq,bk]@[bk,d] GEMMs — structurally ~1/d extra FLOPs and ZERO extra
+    # HBM reads (vc is reduced from the V tile already in VMEM).  CPU wall
+    # is interpret-mode and reported for the ratio only.
+    from repro.kernels.flash_attention import (flash_attention_checked,
+                                               flash_attention_pallas)
+    BH, S, D, bq, bk = 2, 512, 64, 128, 128
+    q = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    kw = dict(scale=D ** -0.5, causal=True, bq=bq, bk=bk, interpret=True)
+    t_plain = _wall(lambda: flash_attention_pallas(q, k, v, **kw), reps=2)
+    t_chk = _wall(lambda: flash_attention_checked(q, k, v, **kw)[0], reps=2)
+    struct_pct = 100.0 * (4 * bq * bk + bk * D) / (4 * bq * bk * D)
+    lines.append((
+        f"kernel_flash_checked/{BH}x{S}x{D}",
+        f"{t_chk*1e6:.0f}",
+        f"checksum_overhead={struct_pct:.2f}% (structural: extra flops "
+        f"of the two [bq,bk]@[bk,1] epilogue products, target <10%) "
+        f"extra_hbm_rd=0 (checksums off the VMEM acc) "
+        f"stats_wr_bytes={BH*(S//bq)*2*4} "
+        f"interpret_wall_ratio={t_chk/t_plain:.2f}x "
+        f"(CPU interpreter, not representative of the TPU epilogue)"))
     return lines

@@ -60,4 +60,14 @@ def run():
     t_enc = _wall(lambda s: _jax.tree.leaves(dcp.encode(s))[0], stacked)
     lines.append(("diskless_encode/qwen2-0.5b-smoke", f"{t_enc*1e6:.0f}",
                   f"bytes={sum(x.nbytes for x in _jax.tree.leaves(stacked))}"))
+
+    # at-rest scrub verify: the read side of the scrubber re-runs the encode
+    # against the held checksums.  Off the step critical path (it runs
+    # between steps, against state the step doesn't mutate), so the row is
+    # the absolute wall, not an overhead % of the step.
+    dcp.encode(stacked, step=0)
+    t_ver = _wall(lambda s: dcp.verify(s)[0], stacked)
+    lines.append(("scrub_verify/qwen2-0.5b-smoke", f"{t_ver*1e6:.0f}",
+                  f"encode_ratio={t_ver/t_enc:.2f}x "
+                  "(off the step critical path)"))
     return lines

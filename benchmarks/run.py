@@ -5,14 +5,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_overhead       -> Table 2 + Figure 6 (model + MEASURED local overhead)
   bench_strong_scaling -> Figure 7
   bench_kernels        -> fused dual-checksum ABFT-matmul kernel accounting
-  bench_train_step     -> live train-step ABFT overhead + diskless encode
+                          + checksummed flash-attention epilogue cost
+  bench_train_step     -> live train-step ABFT overhead, diskless encode,
+                          at-rest scrub verify wall
   bench_serving        -> continuous-batching throughput, ABFT on/off,
-                          SDC-drill recovery-latency accounting
+                          SDC-drill recovery latency, KV/params scrub cost
   bench_elastic        -> pod-loss shrink/re-grow drill: reshard wall,
                           bytes moved, recompile time, steps-to-parity
   bench_chaos          -> single-device chaos-campaign sweep: per-event
-                          outcomes + coverage counters (missed_protected
-                          and false_alarms must be 0)
+                          outcomes + coverage counters (missed_anywhere,
+                          false_alarms and uncovered_surfaces must be 0)
   roofline             -> per (arch x shape) roofline terms from the dry-run
 
 ``--json PATH`` additionally writes a machine-readable name -> {us, derived}

@@ -204,6 +204,7 @@ class CampaignRunner:
         self._train_golden: Dict[tuple, dict] = {}
         self._serve_golden: Dict[tuple, dict] = {}
         self._serve_eng = None      # the warmed drill-free engine, reused
+        self._serve_scrub_eng = None  # ditto with the at-rest scrubber on
         self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
 
     def _log(self, msg: str):
@@ -236,6 +237,7 @@ class CampaignRunner:
             # checkpoint dirs must not outlive the sweep even on an
             # exception; recreate so the runner stays reusable
             self._serve_eng = None
+            self._serve_scrub_eng = None
             self._tmp.cleanup()
             self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
         meta = {
@@ -255,6 +257,10 @@ class CampaignRunner:
             return self._run_serve(spec)
         if spec.kind == "checksum_state_flip":
             return self._run_kernel_state_flip(spec)
+        if spec.kind == "flash_state_flip":
+            return self._run_flash_state_flip(spec)
+        if spec.kind in ("norm_corruption", "gather_corruption"):
+            return self._run_layer_invariant(spec)
         return self._run_train(spec)
 
     def _skipped(self, spec: FaultSpec, why: str) -> FaultResult:
@@ -338,17 +344,38 @@ class CampaignRunner:
             ckpt_manager=mgr, injector=injector)
         return rt
 
+    def _scrub_policy(self):
+        from repro.ft.runtime import FTPolicy
+        # encode + verify every step so any fire step is a scrub step (the
+        # real cadence knob is FTPolicy.scrub_every; drills run it at 1)
+        return FTPolicy(diskless_every=1, disk_every=10 ** 6,
+                        scrub_every=1)
+
     def _golden_train(self, mesh_shape, names, tag) -> dict:
-        """Clean run for one (mesh, opts) configuration, cached."""
+        """Clean run for one (mesh, opts) configuration, cached.  The
+        "scrub" tag runs the at-rest scrubber's full cadence (encode +
+        verify every step) so its clean sweep doubles as the false-alarm
+        check for the DRAM detectors."""
         key = (tuple(mesh_shape), tag)
         if key in self._train_golden:
             return self._train_golden[key]
         self._log(f"golden train {mesh_shape} [{tag}]")
-        rt = self._train_runtime(mesh_shape, names, tag)
+        scrub = tag == "scrub"
+        rt = self._train_runtime(mesh_shape, names, tag,
+                                 policy=self._scrub_policy() if scrub
+                                 else None)
         try:
             state = rt.init_state(0)
             oks, walls, losses = [], [], []
+            scrub_trips, scrub_walls = 0, []
             for i in range(self.train.steps):
+                if scrub:
+                    rt.checkpoint(i, state)
+                    t0 = time.perf_counter()
+                    state, rep = rt.scrub(i, state)
+                    scrub_walls.append(time.perf_counter() - t0)
+                    if rep is not None:
+                        scrub_trips += 1
                 t0 = time.perf_counter()
                 state, m = rt.train_step(i, state)
                 jax.block_until_ready(m["loss"])
@@ -357,7 +384,9 @@ class CampaignRunner:
                 if "abft_ok" in m:
                     oks.append(bool(m["abft_ok"]))
             g = {"final": _host(state), "losses": losses, "walls": walls,
-                 "oks": oks, "detections": sum(1 for o in oks if not o),
+                 "oks": oks,
+                 "detections": sum(1 for o in oks if not o) + scrub_trips,
+                 "scrub_trips": scrub_trips, "scrub_walls": scrub_walls,
                  "mesh_shape": tuple(mesh_shape), "tag": tag}
         finally:
             rt.close()
@@ -435,35 +464,48 @@ class CampaignRunner:
                  "against the clean golden run")
 
     def _train_dram(self, spec: FaultSpec) -> FaultResult:
-        """Silent bit flip in resident state between steps.  Runs under the
-        FULLY protected step (matmul + collective checksums would fire if
-        they could see it) — the honest expected outcome is `missed`:
-        checksums are computed from inputs at call time, so corrupted
-        state checksums consistently."""
-        mesh_shape, names, tag = self._train_mesh(spec)
-        golden = self._golden_train(mesh_shape, names, tag)
-        rt = self._train_runtime(mesh_shape, names, tag)
+        """Silent bit flip in resident state between steps.  The in-flight
+        checksums cannot see it (they are computed from inputs at call
+        time, so corrupted state checksums consistently) — detection is
+        the at-rest scrubber's job: checksum-on-write at the diskless
+        encode, verify-on-read before the next step, snapshot rollback on
+        a trip (ft.runtime.ElasticRuntime.scrub)."""
+        mesh_shape, names, _ = self._train_mesh(spec)
+        golden = self._golden_train(mesh_shape, names, "scrub")
+        rt = self._train_runtime(mesh_shape, names, "scrub",
+                                 policy=self._scrub_policy())
         group = "params" if spec.kind == "dram_params" else "opt"
         try:
             state = rt.init_state(0)
             detected = False
+            latency = None
             leaf_name = None
+            resid = None
             for i in range(self.train.steps):
+                rt.checkpoint(i, state)
                 if i == spec.step:
                     state, leaf_name = _flip_state_leaf(state, group, spec)
                     state = jax.device_put(state, rt.gen.in_shardings[0])
-                state, m = rt.train_step(i, state)
-                if "abft_ok" in m and not bool(m["abft_ok"]):
+                state, rep = rt.scrub(i, state)
+                if rep is not None and rep.rolled_back:
                     detected = True
+                    latency = rep.wall_s
+                    resid = rep.residual
+                state, m = rt.train_step(i, state)
             end_state, diff = _compare_trees(_host(state), golden["final"],
                                              self.train.tol)
         finally:
             rt.close()
         return self._result(
-            spec, detected=detected, corrected=False, rung=None,
-            latency=None, end_state=end_state, max_abs_diff=diff,
+            spec, detected=detected, corrected=detected,
+            rung="scrub:diskless" if detected else None, latency=latency,
+            end_state=end_state, max_abs_diff=diff,
             note=f"bit {spec.bit} flipped in {group} leaf {leaf_name!r} at "
-                 f"step {spec.step}; no detector watches state at rest")
+                 f"step {spec.step}; scrub residual "
+                 f"{resid if resid is None else f'{resid:.2e}'} -> snapshot "
+                 "rollback" if detected else
+                 f"bit {spec.bit} flipped in {group} leaf {leaf_name!r} at "
+                 f"step {spec.step}; scrubber never tripped")
 
     def _train_shard_loss(self, spec: FaultSpec) -> FaultResult:
         """Erasure of one DP shard (platform-signaled) -> rung-2 diskless
@@ -673,6 +715,93 @@ class CampaignRunner:
                  f"both); data must pass through untouched "
                  f"(repaired={repaired})")
 
+    def _run_flash_state_flip(self, spec: FaultSpec) -> FaultResult:
+        """Flip-sized delta into the flash kernel's VMEM scratch (the
+        running ``acc`` accumulator, or the softmax rowsum ``l`` for
+        variant="l") mid-sweep.  The epilogue's checksum residuals — the
+        V-column checksum riding the accumulator and the MXU-path rowsum
+        duplicate — must flag the q-tile, and the detect-and-recompute
+        path must patch it back to the clean output."""
+        from repro.kernels.flash_attention import (flash_attention_checked,
+                                                   flash_attention_pallas)
+
+        rng = np.random.RandomState(spec.seed)
+        bh, s, d = 2, 512, 64
+        bq = bk = 128
+        if spec.step >= s // bk:
+            raise _Skip(f"inject KV step {spec.step} >= {s // bk} KV tiles")
+        q, k, v = (jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+                   for _ in range(3))
+        scale = 1.0 / math.sqrt(d)
+        target = "l" if spec.variant == "l" else "acc"
+        t0 = time.perf_counter()
+        clean = flash_attention_pallas(q, k, v, scale=scale, causal=True,
+                                       bq=bq, bk=bk, interpret=True)
+        clean_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        o, rep = flash_attention_checked(
+            q, k, v, scale=scale, causal=True, bq=bq, bk=bk, interpret=True,
+            inject=(1, spec.step, spec.delta, target))
+        drill_wall = time.perf_counter() - t0
+        end_state, diff = _compare_trees(_host(o), _host(clean),
+                                         self.train.tol)
+        detected = not rep.ok
+        corrected = rep.repaired > 0
+        return self._result(
+            spec, detected=detected, corrected=corrected,
+            rung="flash:recompute_tile" if corrected else None,
+            latency=max(drill_wall - clean_wall, 0.0) if detected else None,
+            end_state=end_state, max_abs_diff=diff,
+            note=f"delta {spec.delta:g} into {target} of tile (0,1) at KV "
+                 f"step {spec.step}; residuals r_pv="
+                 f"{rep.max_pv_residual:.2e} r_l={rep.max_rowsum_residual:.2e}"
+                 f"; {len(rep.detected)} tile(s) flagged "
+                 f"{list(rep.detected)}, {rep.repaired} recomputed dense")
+
+    def _run_layer_invariant(self, spec: FaultSpec) -> FaultResult:
+        """Corrupt the normalize / gather output and let the layer's own
+        construction invariant (rmsnorm second moment, embedding checksum
+        column) detect it; the repair is a straight recompute of the pure
+        function from its (uncorrupted) inputs."""
+        from repro.models import layers
+
+        rng = np.random.RandomState(spec.seed)
+        if spec.kind == "norm_corruption":
+            d = 64
+            p = layers.rmsnorm_init(d)
+            x = jnp.asarray(rng.standard_normal((4, 8, d)), jnp.float32)
+            clean = layers.rmsnorm_apply(p, x)
+            bad, ok = layers.rmsnorm_apply(p, x, check=True,
+                                           inject=spec.delta)
+            t0 = time.perf_counter()
+            fixed, ok2 = (layers.rmsnorm_apply(p, x, check=True)
+                          if not bool(ok) else (bad, ok))
+            latency = time.perf_counter() - t0
+            what = "rmsnorm second-moment"
+        else:
+            vocab, d = 128, 64
+            p = layers.embed_init(jax.random.PRNGKey(spec.seed), vocab, d)
+            tokens = jnp.asarray(rng.randint(0, vocab, (4, 8)), jnp.int32)
+            clean = layers.embed_apply(p, tokens)
+            bad, ok = layers.embed_apply(p, tokens, check=True,
+                                         inject=spec.delta)
+            t0 = time.perf_counter()
+            fixed, ok2 = (layers.embed_apply(p, tokens, check=True)
+                          if not bool(ok) else (bad, ok))
+            latency = time.perf_counter() - t0
+            what = "embedding-gather checksum-column"
+        detected = not bool(ok)
+        corrected = detected and bool(ok2)
+        end_state, diff = _compare_trees(_host(fixed), _host(clean), 0.0)
+        return self._result(
+            spec, detected=detected, corrected=corrected,
+            rung="recompute" if corrected else None,
+            latency=latency if detected else None,
+            end_state=end_state, max_abs_diff=diff,
+            note=f"delta {spec.delta:g} into the first output element; the "
+                 f"{what} invariant {'tripped' if detected else 'missed'}; "
+                 "recompute from uncorrupted inputs restores bit-identity")
+
     # -- serve workload -------------------------------------------------------
 
     def _serve_mesh(self):
@@ -689,25 +818,31 @@ class CampaignRunner:
                                 self.serve.prompt_len).tolist()
                      for _ in range(self.serve.n_requests)]
 
-    def _serve_engine(self, sdc=None):
+    def _serve_engine(self, sdc=None, scrub: int = 0):
         from repro.models import transformer as tf
         from repro.serve.engine import ServeEngine
 
         cfg, prompts = self._serve_prompts()
         if sdc is None:
             # drill-free engines are identical across golden + DRAM specs:
-            # build/warm once, reset() between runs (the PR 3 reuse path)
-            if self._serve_eng is not None:
-                self._serve_eng.reset()
-                return self._serve_eng, prompts
+            # build/warm once, reset() between runs (the PR 3 reuse path);
+            # scrubbed and unscrubbed engines cache separately
+            cached = self._serve_scrub_eng if scrub else self._serve_eng
+            if cached is not None:
+                cached.reset()
+                return cached, prompts
         params = tf.init_params(jax.random.PRNGKey(0), cfg)
         mesh = self._make_mesh(self._serve_mesh(), ("data", "model"))
         eng = ServeEngine(cfg, params, slots=self.serve.slots,
                           max_len=self.serve.max_len, mesh=mesh,
-                          abft_reduce="correct", sdc=sdc)
+                          abft_reduce="correct", sdc=sdc,
+                          scrub_every=scrub)
         eng.warm(prompt_len=self.serve.prompt_len)
         if sdc is None:
-            self._serve_eng = eng
+            if scrub:
+                self._serve_scrub_eng = eng
+            else:
+                self._serve_eng = eng
         return eng, prompts
 
     def _drive(self, eng, prompts, on_step=None):
@@ -718,12 +853,12 @@ class CampaignRunner:
         fin = eng.run(on_step=on_step)
         return {r.rid: list(r.output) for r in fin}
 
-    def _golden_serve(self) -> dict:
-        key = self._serve_mesh()
+    def _golden_serve(self, scrub: int = 0) -> dict:
+        key = self._serve_mesh() + (("scrub",) if scrub else ())
         if key in self._serve_golden:
             return self._serve_golden[key]
         self._log(f"golden serve mesh {key}")
-        eng, prompts = self._serve_engine()
+        eng, prompts = self._serve_engine(scrub=scrub)
         outputs = self._drive(eng, prompts)
         g = {"outputs": outputs, "stats": eng.stats.summary(),
              "detections": eng.stats.detections, "mesh": key}
@@ -759,7 +894,8 @@ class CampaignRunner:
                      f"{st.decode_steps} decode steps; located "
                      + ", ".join(f"(r{e.row},c{e.col})" for e in st.events))
         if spec.kind in ("dram_kv_cache", "dram_params"):
-            eng, prompts = self._serve_engine()
+            golden = self._golden_serve(scrub=1)
+            eng, prompts = self._serve_engine(scrub=1)
             fired = {}
 
             def on_step(engine, step):
@@ -777,17 +913,29 @@ class CampaignRunner:
             if not fired:
                 raise _Skip(f"flip step {spec.step} never reached "
                             f"({st.decode_steps} decode steps ran)")
-            detected = st.detections > 0
+            evs = st.scrub_events
+            detected = bool(evs)
+            corrected = detected and all(e.repaired for e in evs)
+            rung = None
+            if detected:
+                rung = ("scrub:kv_repair" if evs[0].domain == "kv"
+                        else "scrub:restore")
             end_state = ("bit_identical" if outputs == golden["outputs"]
                          else "diverged")
             return self._result(
-                spec, detected=detected, corrected=False, rung=None,
-                latency=None, end_state=end_state,
+                spec, detected=detected, corrected=corrected, rung=rung,
+                latency=(sum(e.wall_s for e in evs) / len(evs)
+                         if evs else None),
+                end_state=end_state,
                 max_abs_diff=0.0 if end_state == "bit_identical" else None,
                 note=f"bit {spec.bit} flipped in {fired.get('leaf')!r} at "
-                     f"decode step {spec.step}; outputs "
-                     f"{'unchanged' if end_state == 'bit_identical' else 'diverged'}, "
-                     f"{st.detections} detections")
+                     f"decode step {spec.step}; scrub "
+                     + (", ".join(
+                         f"{e.domain}:{e.leaf}"
+                         + (f"[slot {e.slot}]" if e.slot >= 0 else "")
+                         for e in evs) or "never tripped")
+                     + f"; outputs "
+                     f"{'unchanged' if end_state == 'bit_identical' else 'diverged'}")
         raise ValueError(f"unhandled serve kind {spec.kind!r}")
 
     # -- clean sweeps ---------------------------------------------------------
@@ -806,8 +954,18 @@ class CampaignRunner:
                                promise="none")
             sweep_surface = ("dist.collectives/abft_psum"
                              if tag == "protected" else
+                             "state.params_at_rest" if tag == "scrub" else
                              "ft.runtime/topology" if len(shape) == 3
                              else "ckpt.diskless/shards")
+            note = (f"{g['detections']} detection(s) over "
+                    f"{self.train.steps} clean steps "
+                    f"({len(g['oks'])} protected reductions observed)")
+            if tag == "scrub":
+                note = (f"{g['scrub_trips']} scrub trip(s) over "
+                        f"{len(g['scrub_walls'])} clean at-rest scrubs "
+                        f"(mean verify "
+                        f"{1e3 * sum(g['scrub_walls']) / max(len(g['scrub_walls']), 1):.1f} ms, "
+                        "off the step critical path)")
             rows.append(FaultResult(
                 name=f"train:clean_sweep:{'x'.join(map(str, shape))}:{tag}",
                 workload="train", kind="clean_sweep",
@@ -816,24 +974,28 @@ class CampaignRunner:
                 detected=detected, corrected=False, rung=None,
                 recovery_latency_s=None, end_state="bit_identical",
                 max_abs_diff=0.0, wall_s=sum(g["walls"]),
-                note=f"{g['detections']} detection(s) over "
-                     f"{self.train.steps} clean steps "
-                     f"({len(g['oks'])} protected reductions observed)"))
-        for key, g in sorted(self._serve_golden.items()):
+                note=note))
+        for key, g in sorted(self._serve_golden.items(), key=str):
             detected = g["detections"] > 0
             outcome = classify(injected=False, detected=detected,
                                corrected=False, end_state="bit_identical",
                                promise="none")
+            scrub = key[-1] == "scrub"
+            note = (f"{g['detections']} detection(s) over "
+                    f"{g['stats']['decode_steps']} clean decode steps")
+            if scrub:
+                note += (f", {g['stats']['scrub_checks']} at-rest scrubs "
+                         f"(KV + params fingerprints)")
             rows.append(FaultResult(
                 name=f"serve:clean_sweep:{'x'.join(map(str, key))}",
                 workload="serve", kind="clean_sweep",
-                surface="serve.engine/logits_reduce", protected=True,
+                surface=("serve.engine/kv_cache_at_rest" if scrub
+                         else "serve.engine/logits_reduce"), protected=True,
                 promise="none", outcome=outcome, detected=detected,
                 corrected=False, rung=None, recovery_latency_s=None,
                 end_state="bit_identical", max_abs_diff=0.0,
                 wall_s=g["stats"]["decode_s"] + g["stats"]["prefill_s"],
-                note=f"{g['detections']} detection(s) over "
-                     f"{g['stats']['decode_steps']} clean decode steps"))
+                note=note))
         return rows
 
 

@@ -9,9 +9,12 @@ Three things live here, deliberately in one dependency-light module:
      what it protects, what detects a fault there, and what end-state
      promise a successful recovery makes (``bit_identity`` vs
      ``tolerance``).  Surfaces with ``protected=False`` form the honest
-     *uncovered ledger* — flash-attention, layernorm, the embedding
-     gather, and state sitting in DRAM have no detector today, and the
-     campaign reports that instead of skipping it.
+     *uncovered ledger* — the campaign reports them instead of skipping
+     them.  The ledger is EMPTY as of PR 6: flash attention carries an
+     in-kernel checksum + rowsum invariant, rmsnorm/embedding-gather carry
+     construction invariants, and state at rest (params, opt state, KV
+     cache) is covered by the at-rest scrubbers in `ft.runtime` and
+     `serve.engine`.
 
   2. **The `FaultSpec` taxonomy** — one declarative record per injectable
      fault, naming its kind, its target surface, the workload it runs
@@ -89,7 +92,17 @@ _PROMISES = ("bit_identity", "tolerance", "none")
 def register_surface(name: str, *, owner: str, protected: bool,
                      promise: str = "none", detector: str = "",
                      kinds: Sequence[str] = (), note: str = "") -> Surface:
-    """Register (idempotently) a protection domain / uncovered surface."""
+    """Register (idempotently) a protection domain / uncovered surface.
+
+    Double registration is NOT last-write-wins: a ``protected=True``
+    registration always wins over an unprotected placeholder regardless of
+    which imported first (a module adding protection upgrades the ledger
+    entry; a stale placeholder imported later can never silently erase
+    it), and a conflicting re-registration at the SAME protection level by
+    a DIFFERENT owner raises — two modules claiming one surface is a wiring
+    bug, not a tie to break silently.  A module re-registering its own
+    surface (reload) replaces it.
+    """
     if promise not in _PROMISES:
         raise ValueError(f"unknown promise {promise!r}: expected one of "
                          f"{_PROMISES}")
@@ -98,6 +111,17 @@ def register_surface(name: str, *, owner: str, protected: bool,
                          "detector")
     s = Surface(name=name, owner=owner, protected=protected, promise=promise,
                 detector=detector, kinds=tuple(kinds), note=note)
+    old = _REGISTRY.get(name)
+    if old is not None and old != s:
+        if old.protected and not s.protected:
+            # downgrade attempt: the placeholder loses, protection stays
+            return old
+        if not (s.protected and not old.protected) and old.owner != s.owner:
+            raise ValueError(
+                f"surface {name!r} already registered by {old.owner!r} "
+                f"(protected={old.protected}); conflicting re-registration "
+                f"by {s.owner!r} — two owners claiming one surface is a "
+                "wiring bug")
     _REGISTRY[name] = s
     return s
 
@@ -115,7 +139,12 @@ def surfaces() -> Dict[str, Surface]:
 
 
 def uncovered_surfaces() -> List[Surface]:
-    """The honest ledger: every registered surface with no protection."""
+    """The honest ledger: every registered surface with no protection.
+
+    Self-registering (like `get_surface`): the owning modules are imported
+    first, so a report generated before any workload path ran still sees
+    the complete ledger instead of a stale subset."""
+    ensure_registered()
     return sorted((s for s in _REGISTRY.values() if not s.protected),
                   key=lambda s: s.name)
 
@@ -124,7 +153,9 @@ def ensure_registered() -> Dict[str, Surface]:
     """Import every module that registers a surface, then return the
     registry.  Registration happens at import time in the owning module;
     campaigns and reports call this so the ledger is complete even when a
-    workload path was never touched."""
+    workload path was never touched.  A module that starts registering (or
+    upgrading) a surface MUST be added to this list, or reports generated
+    before it imports will show a stale registry."""
     import importlib
     for mod in ("repro.dist.collectives", "repro.kernels.ops",
                 "repro.kernels.flash_attention", "repro.ckpt.diskless",
@@ -134,21 +165,23 @@ def ensure_registered() -> Dict[str, Surface]:
     return dict(_REGISTRY)
 
 
-# state sitting in DRAM between steps: nothing in the system reads it back
-# through a checksum, so a silent flip there is invisible until it has
-# already poisoned the computation.  The diskless checkpoint HOLDS enough
-# information to detect/locate a stale flip (re-verify the encode), but no
-# path is wired to do so — the ledger says so instead of pretending.
+# state sitting in DRAM between steps: the in-step checksums are computed
+# from inputs at call time, so a pre-corrupted value checksums consistently
+# (garbage in, checksummed garbage out).  These placeholders register the
+# surfaces UNPROTECTED; `ft.runtime` upgrades both at import (protected
+# registration wins — see `register_surface`) with its at-rest scrubber,
+# which re-verifies the diskless encode before state is consumed and rolls
+# back to the encode-point snapshot on a trip.
 register_surface(
     "state.params_at_rest", owner="repro.chaos.faults", protected=False,
-    note="resident params between steps; ABFT checksums are computed from "
-         "inputs at call time, so a pre-corrupted weight yields consistent "
-         "checksums (garbage in, checksummed garbage out); diskless encode "
-         "could re-verify in principle but is not wired to")
+    note="resident params between steps; upgraded to protected by the "
+         "ft.runtime scrub cadence (train) and the serve.engine params "
+         "scrub (serve)")
 register_surface(
     "state.opt_state_at_rest", owner="repro.chaos.faults", protected=False,
-    note="AdamW moments (ZeRO-1 sharded) between steps; same blind spot as "
-         "params_at_rest")
+    note="AdamW moments (ZeRO-1 sharded) between steps; upgraded to "
+         "protected by the ft.runtime scrub cadence (the encode covers the "
+         "full stacked state, opt moments included)")
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +189,8 @@ register_surface(
 # ---------------------------------------------------------------------------
 
 
-KINDS = ("sdc_collective", "checksum_state_flip", "dram_params",
+KINDS = ("sdc_collective", "checksum_state_flip", "flash_state_flip",
+         "norm_corruption", "gather_corruption", "dram_params",
          "dram_opt_state", "dram_kv_cache", "shard_loss", "pod_loss",
          "slow_pod")
 
@@ -168,6 +202,12 @@ _KIND_INFO = {
                  "serve": "serve.engine/logits_reduce"}),
     "checksum_state_flip": dict(
         workloads=("train",), surface="kernels.ops/acc_state"),
+    "flash_state_flip": dict(
+        workloads=("train",), surface="kernels.flash_attention"),
+    "norm_corruption": dict(
+        workloads=("train",), surface="models.layers/layernorm"),
+    "gather_corruption": dict(
+        workloads=("train",), surface="models.layers/embedding_gather"),
     "dram_params": dict(
         workloads=("train", "serve"), surface="state.params_at_rest"),
     "dram_opt_state": dict(
@@ -286,7 +326,7 @@ class FaultSpace:
 
     @classmethod
     def smoke(cls) -> "FaultSpace":
-        """Six fault classes across both workloads, all single-device
+        """Nine fault classes across both workloads, all single-device
         drillable (no pod axis needed) — what `benchmarks.bench_chaos`
         and the classification tests run."""
         return cls("smoke", (
@@ -294,6 +334,9 @@ class FaultSpace:
                       shard=0, delta=1e4),
             FaultSpec(kind="checksum_state_flip", workload="train", step=1,
                       bit=30),
+            FaultSpec(kind="flash_state_flip", workload="train", step=1),
+            FaultSpec(kind="norm_corruption", workload="train", step=2),
+            FaultSpec(kind="gather_corruption", workload="train", step=2),
             FaultSpec(kind="dram_params", workload="train", step=2, bit=30),
             FaultSpec(kind="dram_opt_state", workload="train", step=2,
                       bit=29),
@@ -306,7 +349,7 @@ class FaultSpace:
 
     @classmethod
     def default(cls) -> "FaultSpace":
-        """The full committed campaign (CAMPAIGN_PR5.json): all eight
+        """The full committed campaign (CAMPAIGN_PR6.json): all eleven
         kinds, both workloads, both pod-loss recovery rungs.  The
         multi-pod specs need >= 8 devices (the campaign reports them as
         ``skipped`` rather than crashing when fewer are present)."""
@@ -316,6 +359,8 @@ class FaultSpace:
             FaultSpec(kind="sdc_collective", workload="serve", step=3,
                       shard=1, delta=-3e4, seed=1),
             FaultSpec(kind="dram_params", workload="serve", step=0, bit=30),
+            FaultSpec(kind="flash_state_flip", workload="train", step=2,
+                      variant="l", seed=1),
             FaultSpec(kind="shard_loss", workload="train", step=3, shard=1,
                       seed=1),
             FaultSpec(kind="pod_loss", workload="train", step=3,

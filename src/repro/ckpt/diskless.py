@@ -27,6 +27,7 @@ leading axis sharded over ("pod","data") — placement then *is* the rotation.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -66,32 +67,66 @@ class DisklessCheckpoint:
         self._step = None
 
     # -- encode (the "checkpoint") -------------------------------------------
+    def _enc_leaf(self, x):
+        # the fused encode kernel is written for [p, m, n]; higher-rank
+        # leaves (a stacked view of stacked layer groups) take the
+        # generic einsum below
+        if x.ndim == 3 and x.shape[0] == self.p:
+            return ops.checksum_encode(x, self.a)
+        if x.ndim >= 1 and x.shape[0] == self.p:
+            flat = x.reshape(self.p, -1)
+            y = jnp.einsum("fp,pn->fn", self.a.astype(jnp.float32),
+                           flat.astype(jnp.float32))
+            return y.reshape((self.f,) + x.shape[1:]).astype(x.dtype)
+        # tiny/odd leaves (scalars, counters): replicate verbatim
+        return x
+
     def encode(self, state, step: Optional[int] = None):
         """Snapshot + checksum every leaf over its leading [p, ...] axis.
 
         On a pod the snapshot is each device's local copy of its own shard
         (device-local memory); here it is the stacked tree."""
-        def enc(x):
-            # the fused encode kernel is written for [p, m, n]; higher-rank
-            # leaves (a stacked view of stacked layer groups) take the
-            # generic einsum below
-            if x.ndim == 3 and x.shape[0] == self.p:
-                return ops.checksum_encode(x, self.a)
-            if x.ndim >= 1 and x.shape[0] == self.p:
-                flat = x.reshape(self.p, -1)
-                y = jnp.einsum("fp,pn->fn", self.a.astype(jnp.float32),
-                               flat.astype(jnp.float32))
-                return y.reshape((self.f,) + x.shape[1:]).astype(x.dtype)
-            # tiny/odd leaves (scalars, counters): replicate verbatim
-            return x
-
         # real copy: the live state buffers may be donated into the next
         # step; the local checkpoint must own its memory (that's the
         # diskless protocol's 1x local-memory cost)
         self._snapshot = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
-        self._enc = jax.tree.map(enc, state)
+        self._enc = jax.tree.map(self._enc_leaf, state)
         self._step = step
         return self._enc
+
+    # -- scrub (at-rest integrity) --------------------------------------------
+    def verify(self, state, tol: float = 1e-6):
+        """Re-run the encode over ``state`` and compare against the held
+        checksums: the at-rest scrubber's read side.
+
+        Only meaningful when ``state`` is SUPPOSED to be bit-identical to
+        the encode-point state (same step, no update applied since) — the
+        caller owns that cadence (ft.runtime.ElasticRuntime.scrub).  A
+        mismatch means a DRAM flip in either the live state or the
+        snapshot; the recovery rolls back to the snapshot, whose own
+        integrity the same checksums vouch for.  Returns
+        ``(ok, first_bad_leaf, max_residual)``.
+        """
+        assert self._enc is not None, "no diskless checkpoint taken"
+        fresh = jax.tree.map(self._enc_leaf, state)
+        bad, worst = "", 0.0
+        flat_new = jax.tree_util.tree_flatten_with_path(fresh)[0]
+        flat_old = jax.tree.leaves(self._enc)
+        for (path, ny), oy in zip(flat_new, flat_old):
+            n32 = jnp.asarray(ny, jnp.float32)
+            o32 = jnp.asarray(oy, jnp.float32)
+            r = float(jnp.max(jnp.abs(n32 - o32)) /
+                      (jnp.max(jnp.abs(o32)) + 1.0))
+            if math.isnan(r):
+                # a flip into the NaN pattern contaminates the whole
+                # encode; NaN compares false against every threshold, so
+                # normalize to the trip it is
+                r = math.inf
+            if r > worst:
+                worst = r
+                if r > tol:
+                    bad = jax.tree_util.keystr(path)
+        return worst <= tol, bad, worst
 
     # -- recover ---------------------------------------------------------------
     def recover(self, damaged, failed: Sequence[int]):

@@ -52,7 +52,7 @@ from repro.ckpt.diskless import DisklessCheckpoint
 from repro.ft.failures import FailureInjector, SDCInjector
 
 __all__ = ["FTPolicy", "FTRuntime", "ElasticRuntime", "MeshGeneration",
-           "ElasticReport", "StragglerDetector", "stack_view",
+           "ElasticReport", "ScrubReport", "StragglerDetector", "stack_view",
            "unstack_view"]
 
 # the protection domain this module owns (repro.chaos campaigns drill it):
@@ -70,6 +70,29 @@ register_surface(
          "rung 3a (diskless checksum solve) is near-exact, hence the "
          "tolerance promise; demotion rolls back to the last checkpoint "
          "and replays deterministically")
+# at-rest scrub: upgrades the faults.py placeholders to protected.  The
+# cadenced `ElasticRuntime.scrub` re-runs the diskless encode over the live
+# stacked state and compares against the checksums held since the encode
+# point — a silent DRAM flip in resident params or opt moments trips the
+# residual and rolls back to the snapshot (rung "scrub:diskless").
+register_surface(
+    "state.params_at_rest", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="checksum-on-write / verify-on-read: the scrub cadence "
+             "recomputes the diskless encode of the live state and "
+             "compares leafwise against the held checksums "
+             "(DisklessCheckpoint.verify); a trip restores the snapshot",
+    kinds=("dram_params",),
+    note="valid only at encode-point steps (state unchanged since encode); "
+         "the serve-side params scrub lives in serve.engine")
+register_surface(
+    "state.opt_state_at_rest", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="same scrub as params: the diskless encode covers the FULL "
+             "stacked state, AdamW moments included, so an at-rest flip "
+             "in the opt state trips the same leafwise residual",
+    kinds=("dram_opt_state",),
+    note="rollback restores the whole snapshot (params + opt + step)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +112,12 @@ class FTPolicy:
     slow_pod_threshold: float = 3.0  # x median step-time EWMA -> demote pod
     straggler_alpha: float = 0.5   # EWMA smoothing of per-pod step times
     straggler_warmup: int = 3      # observations before the detector trips
+    # at-rest scrub cadence (steps); 0 = off.  A scrub only fires at steps
+    # that are also encode points (the verify needs unchanged state), so a
+    # useful cadence is a multiple of diskless_every — the drills run both
+    # at 1.  Off the critical path: the verify reads state the step is not
+    # mutating and can overlap the next step's compute.
+    scrub_every: int = 0
 
 
 def stack_view(state, p: int):
@@ -256,6 +285,16 @@ class MeshGeneration:
     build_s: float              # python build (specs, tracers) wall
     compile_s: float            # lower+compile wall (0.0 when cache-reused)
     reused: bool = False        # executable came from the generation cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrubReport:
+    """One at-rest scrub that TRIPPED (clean scrubs return None)."""
+    step: int                   # encode-point step the scrub verified
+    leaf: str                   # first leaf whose checksum residual tripped
+    residual: float             # worst relative residual observed
+    wall_s: float               # verify + restore wall
+    rolled_back: bool           # snapshot restore applied
 
 
 @dataclasses.dataclass(frozen=True)
@@ -451,6 +490,37 @@ class ElasticRuntime(FTRuntime):
                 "data_step": step,
                 "data": dict(self.pipe.state_dict(), step=step),
                 "gen": self.gen.gen, "mesh": dict(self.gen.mesh.shape)})
+
+    # -- at-rest scrub (state.params_at_rest / state.opt_state_at_rest) ------
+
+    def scrub(self, step: int, state):
+        """Cadenced at-rest integrity scrub.  Returns ``(state, report)``
+        with ``report=None`` when the scrub did not fire or found the
+        state clean.
+
+        Checksum-on-write / verify-on-read: only fires at steps where the
+        diskless encode was taken THIS step (``diskless.step == step``), so
+        the live state is supposed to be bit-identical to the encode-point
+        state and any checksum residual is a DRAM flip — in params, opt
+        moments, or the step counter alike (the encode covers the full
+        stacked state).  A trip restores the snapshot (whose integrity the
+        same checksums vouch for) through the rung-2 path and counts under
+        ``recoveries["scrub"]``."""
+        if not self.policy.scrub_every or step % self.policy.scrub_every:
+            return state, None
+        if self.diskless.step != step:
+            return state, None
+        t0 = time.time()
+        stacked = stack_view(state, self.p)
+        ok, leaf, resid = self.diskless.verify(stacked)
+        if ok:
+            return state, None
+        self.recoveries["scrub"] = self.recoveries.get("scrub", 0) + 1
+        restored = unstack_view(self.diskless.recover(stacked, []), state)
+        state = jax.device_put(restored, self.gen.in_shardings[0])
+        report = ScrubReport(step=step, leaf=leaf, residual=resid,
+                             wall_s=time.time() - t0, rolled_back=True)
+        return state, report
 
     # -- rung 2: same-topology shard loss ------------------------------------
 

@@ -7,18 +7,20 @@ classifies each event as detected / corrected / missed / false-alarm
 against a clean golden run, and writes the machine-readable artifact CI
 gates on (`--json`) plus a rendered markdown matrix on stdout.
 
-Usage (the committed CAMPAIGN_PR5.json is exactly this, 8 host devices so
+Usage (the committed CAMPAIGN_PR6.json is exactly this, 8 host devices so
 the multi-pod specs run instead of reporting `skipped`):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
   python -m repro.launch.chaos --space default --workload both \
-      --json CAMPAIGN_PR5.json
+      --json CAMPAIGN_PR6.json
 
   # single-device subset (what benchmarks/bench_chaos.py runs)
   PYTHONPATH=src python -m repro.launch.chaos --space smoke --json out.json
 
-``--check`` exits non-zero when a protected domain missed a fault or a
-clean sweep raised a false alarm — the CI gate.
+``--check`` exits non-zero when ANY fault went missed (not just inside
+protected domains — the ledger is retired, so every surface is expected
+to detect), a clean sweep raised a false alarm, a spec was skipped, or a
+surface reappeared on the uncovered ledger — the CI gate.
 """
 from __future__ import annotations
 
@@ -48,8 +50,9 @@ def main(argv=None) -> int:
     ap.add_argument("--markdown", metavar="PATH", default=None,
                     help="also write the rendered matrix to a file")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 on protected-domain misses / false alarms "
-                         "/ skipped specs (the CI gate)")
+                    help="exit 1 on ANY missed fault / false alarms / a "
+                         "non-empty uncovered ledger / skipped specs "
+                         "(the CI gate)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -77,11 +80,13 @@ def main(argv=None) -> int:
 
     summ = d["summary"]
     bad = []
-    if summ["missed_in_protected_domains"]:
-        bad.append(f"protected-domain misses: "
-                   f"{summ['missed_in_protected_domains']}")
+    if summ["missed_anywhere"]:
+        bad.append(f"missed faults: {summ['missed_anywhere']}")
     if summ["false_alarms"]:
         bad.append(f"false alarms: {summ['false_alarms']}")
+    if d["uncovered_surfaces"]:
+        bad.append("uncovered-surface ledger is no longer empty: "
+                   + str([r["surface"] for r in d["uncovered_surfaces"]]))
     if args.check and summ["by_outcome"].get("skipped"):
         bad.append(f"{summ['by_outcome']['skipped']} spec(s) skipped "
                    "(need more devices?)")

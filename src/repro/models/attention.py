@@ -64,7 +64,10 @@ def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
     if causal:
         m &= qp >= kp
     if window is not None:
+        # two-sided band: bounding only qp - kp would let a non-causal
+        # window attend to arbitrarily-far future keys
         m &= qp - kp < window
+        m &= kp - qp < window
     return m
 
 

@@ -20,19 +20,28 @@ import jax.numpy as jnp
 from repro.chaos.faults import register_surface
 from repro.core.abft_gemm import ABFTConfig, abft_matmul, encode_weight
 
-# honest ledger entries for repro.chaos: the non-GEMM layer math carries no
-# checksums.  The projections (linear_apply under abft=) are protected; the
-# elementwise/normalization/gather tissue between them is not.
+# repro.chaos surfaces: the non-GEMM layer math carries no ABFT checksum
+# columns, but each op has a cheap invariant known by construction, checked
+# when `check=True` (wired through StepOptions.invariant_checks).
 register_surface(
-    "models.layers/layernorm", owner=__name__, protected=False,
-    note="RMS/layer normalization is nonlinear (mean/rsqrt): the ABFT "
-         "checksum columns do not commute through it, so a flip in the "
-         "normalized activations is invisible until a later protected "
-         "projection re-checksums already-corrupted inputs")
+    "models.layers/layernorm", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="second-moment invariant: for y = x * rsqrt(var + eps) the "
+             "mean of y^2 equals var/(var+eps) by construction; "
+             "rmsnorm_apply(check=True) recomputes the moment from the "
+             "normalized output and trips on |residual| > RMSNORM_TOL",
+    kinds=("norm_corruption",),
+    note="detect-and-recompute: a trip reruns the norm from the (still "
+         "clean) input; enabled via StepOptions.invariant_checks")
 register_surface(
-    "models.layers/embedding_gather", owner=__name__, protected=False,
-    note="embed_apply is a gather (jnp.take): no reduction for a checksum "
-         "to ride; a flipped table row or index propagates undetected")
+    "models.layers/embedding_gather", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="checksum column appended to the table at apply time "
+             "(sum over d_model per row); the gathered rows must satisfy "
+             "sum(row) == row_checksum, verified vectorized over tokens",
+    kinds=("gather_corruption",),
+    note="detect-and-recompute: a trip re-gathers from the table; enabled "
+         "via StepOptions.invariant_checks")
 
 # ---------------------------------------------------------------------------
 # ABFT-protected linear
@@ -77,11 +86,31 @@ def rmsnorm_init(d: int, dtype=jnp.float32):
     return {"scale": jnp.ones((d,), dtype)}
 
 
-def rmsnorm_apply(p, x, eps: float = 1e-6):
+RMSNORM_TOL = 1e-3
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6, *, check: bool = False,
+                  inject: Optional[float] = None):
+    """RMS norm; with ``check=True`` returns ``(y, ok)``.
+
+    The pre-scale output satisfies mean(y_pre^2) == var/(var+eps) by
+    construction, so recomputing that moment from y_pre is a free
+    integrity invariant over the normalize path.  ``inject`` adds a delta
+    to the first y_pre element (chaos drill hook) so the invariant — not
+    the injection site — does the detecting.
+    """
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
-    y = x32 * jax.lax.rsqrt(var + eps)
-    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    y_pre = x32 * jax.lax.rsqrt(var + eps)
+    if inject is not None:
+        y_pre = y_pre.at[(0,) * y_pre.ndim].add(inject)
+    y = (y_pre * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    if not check:
+        return y
+    want = var / (var + eps)
+    got = jnp.mean(jnp.square(y_pre), axis=-1, keepdims=True)
+    ok = jnp.max(jnp.abs(got - want)) <= RMSNORM_TOL
+    return y, ok
 
 
 # ---------------------------------------------------------------------------
@@ -136,8 +165,32 @@ def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
     return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
 
 
-def embed_apply(p, tokens):
-    return jnp.take(p["table"], tokens, axis=0)
+GATHER_TOL = 1e-3
+
+
+def embed_apply(p, tokens, *, check: bool = False,
+                inject: Optional[float] = None):
+    """Token embedding gather; with ``check=True`` returns ``(y, ok)``.
+
+    A checksum column (per-row sum over d_model) is appended to the table
+    at apply time and gathered alongside the rows; the gathered rows must
+    reproduce it, which catches flips in either the gathered activations
+    or the table rows feeding them.  The column lives outside the
+    trainable params on purpose: stored in-table it would go stale under
+    AdamW's nonlinear per-param moments and break the tied unembedding.
+    ``inject`` perturbs the first gathered element (chaos drill hook).
+    """
+    if not check:
+        return jnp.take(p["table"], tokens, axis=0)
+    t32 = p["table"].astype(jnp.float32)
+    aug = jnp.concatenate([t32, jnp.sum(t32, axis=-1, keepdims=True)], -1)
+    rows = jnp.take(aug, tokens, axis=0)
+    if inject is not None:
+        rows = rows.at[(0,) * rows.ndim].add(inject)
+    y, csum = rows[..., :-1], rows[..., -1]
+    resid = jnp.abs(jnp.sum(y, axis=-1) - csum)
+    ok = jnp.max(resid) <= GATHER_TOL * (jnp.max(jnp.abs(csum)) + 1.0)
+    return y.astype(p["table"].dtype), ok
 
 
 def unembed_apply(p_head, x, *, softcap: Optional[float] = None,

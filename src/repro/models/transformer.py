@@ -130,10 +130,24 @@ def _block_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int):
 
 
 def _block_apply(p, x, cfg: ModelConfig, mixer: str, ffn: str, *,
-                 positions, cache=None, cross_src=None, abft=None):
-    """Returns (x, new_cache, aux_loss)."""
+                 positions, cache=None, cross_src=None, abft=None,
+                 invariants: bool = False):
+    """Returns (x, new_cache, aux_loss, inv_ok).
+
+    ``invariants=True`` runs each rmsnorm through its second-moment
+    construction check (models.layers surface drills); ``inv_ok`` is the
+    AND of every check, constant True when checks are off.
+    """
     aux = jnp.zeros((), jnp.float32)
-    h = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+    ok = jnp.array(True)
+
+    def norm(pn, xx):
+        if invariants:
+            return rmsnorm_apply(pn, xx, cfg.norm_eps, check=True)
+        return rmsnorm_apply(pn, xx, cfg.norm_eps), jnp.array(True)
+
+    h, ok1 = norm(p["norm1"], x)
+    ok &= ok1
     new_cache = cache
     if mixer in ("attn", "attn_local", "attn_bidir"):
         spec = _attn_spec(cfg, mixer)
@@ -153,7 +167,8 @@ def _block_apply(p, x, cfg: ModelConfig, mixer: str, ffn: str, *,
         if cache is not None:
             new_cache = {**cache, **new_cache}
         x = x + y
-        hc = rmsnorm_apply(p["norm_c"], x, cfg.norm_eps)
+        hc, okc = norm(p["norm_c"], x)
+        ok &= okc
         cspec = _attn_spec(cfg, "cross")
         if cross_src is not None:
             yc, _ = attn.attn_apply(p["cross"], hc, cspec, positions=positions,
@@ -200,13 +215,14 @@ def _block_apply(p, x, cfg: ModelConfig, mixer: str, ffn: str, *,
         raise ValueError(mixer)
     x = x + y
     if ffn in ("dense", "moe"):
-        h2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        h2, ok2 = norm(p["norm2"], x)
+        ok &= ok2
         if ffn == "dense":
             y2 = mlp_apply(p["mlp"], h2, activation=cfg.activation, abft=abft)
         else:
             y2, aux = moe_mod.moe_apply(p["moe"], h2, _moe_spec(cfg), abft)
         x = x + y2
-    return x, new_cache, aux
+    return x, new_cache, aux, ok
 
 
 def _cross_from_cache(p_cross, h, spec, cache):
@@ -273,8 +289,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def _run_groups(params, x, cfg: ModelConfig, *, positions, cache,
-                cross_src, abft, remat: bool, x_sharding=None):
-    """Scan every layout group; returns (x, new_cache, aux_total).
+                cross_src, abft, remat: bool, x_sharding=None,
+                invariants: bool = False):
+    """Scan every layout group; returns (x, new_cache, aux_total, inv_ok).
 
     The cache rides in the scan CARRY (indexed by the layer counter), not in
     xs/ys: while-loop carries alias in place, so a decode step updates the
@@ -283,12 +300,13 @@ def _run_groups(params, x, cfg: ModelConfig, *, positions, cache,
     """
     new_groups = []
     aux_total = jnp.zeros((), jnp.float32)
+    ok_total = jnp.array(True)
     for gi, (pattern, repeats) in enumerate(cfg.layout):
         gparams = params["groups"][gi]
         gcache = cache["groups"][gi] if cache is not None else None
 
         def body(carry, xs, _pattern=pattern):
-            xx, aux_acc, cstack = carry
+            xx, aux_acc, ok_acc, cstack = carry
             pslice, idx = xs
             if x_sharding is not None:
                 # pin the residual stream so the auto-partitioner doesn't
@@ -302,30 +320,31 @@ def _run_groups(params, x, cfg: ModelConfig, *, positions, cache,
                         cstack[f"b{bi}"])
                 else:
                     c_in = None
-                xx, c_out, aux = _block_apply(
+                xx, c_out, aux, ok_b = _block_apply(
                     pslice[f"b{bi}"], xx, cfg, mixer, ffn,
                     positions=positions, cache=c_in, cross_src=cross_src,
-                    abft=abft)
+                    abft=abft, invariants=invariants)
                 aux_acc = aux_acc + aux
+                ok_acc = ok_acc & ok_b
                 if cstack is not None and c_out is not None:
                     cstack = dict(cstack)
                     cstack[f"b{bi}"] = jax.tree.map(
                         lambda full, new: lax.dynamic_update_index_in_dim(
                             full, new.astype(full.dtype), idx, 0),
                         cstack[f"b{bi}"], c_out)
-            return (xx, aux_acc, cstack), None
+            return (xx, aux_acc, ok_acc, cstack), None
 
         if remat:
             policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                       if remat == "dots" else
                       jax.checkpoint_policies.nothing_saveable)
             body = jax.checkpoint(body, policy=policy)
-        (x, aux_total, new_gcache), _ = lax.scan(
-            body, (x, aux_total, gcache),
+        (x, aux_total, ok_total, new_gcache), _ = lax.scan(
+            body, (x, aux_total, ok_total, gcache),
             (gparams, jnp.arange(repeats)))
         new_groups.append(new_gcache)
     new_cache = {"groups": new_groups} if cache is not None else None
-    return x, new_cache, aux_total
+    return x, new_cache, aux_total, ok_total
 
 
 def _encode_frames(params, frames, cfg: ModelConfig):
@@ -334,8 +353,8 @@ def _encode_frames(params, frames, cfg: ModelConfig):
 
     def body(carry, pslice):
         xx = carry
-        xx, _, _ = _block_apply(pslice, xx, cfg, "attn_bidir", "dense",
-                                positions=jnp.arange(x.shape[1]))
+        xx, _, _, _ = _block_apply(pslice, xx, cfg, "attn_bidir", "dense",
+                                   positions=jnp.arange(x.shape[1]))
         return xx, None
 
     x, _ = lax.scan(body, x, params["encoder"])
@@ -344,7 +363,8 @@ def _encode_frames(params, frames, cfg: ModelConfig):
 
 def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
             frames=None, img_emb=None, abft=None, remat: bool = False,
-            logits_sharding=None, x_sharding=None, return_hidden: bool = False):
+            logits_sharding=None, x_sharding=None, return_hidden: bool = False,
+            invariants: bool = False):
     """Train/prefill forward. tokens: [B,S] -> logits [B,S,V] fp32.
 
     frames: [B, n_frames, d_model] (whisper stub input);
@@ -353,11 +373,19 @@ def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
     hidden state [B,S,D] instead of logits — the serving engine uses this
     to route the final projection through its own checksum-verified
     cross-shard reduction (serve.engine).
+    invariants: run the models.layers construction invariants (embedding
+    gather checksum column, every rmsnorm second moment) and return a
+    4-tuple (..., inv_ok) — StepOptions.invariant_checks surfaces it as
+    metrics["inv_ok"].
     """
     b, s = tokens.shape
     if positions is None:
         positions = jnp.arange(s)
-    x = embed_apply(params["embed"], tokens)
+    if invariants:
+        x, ok_embed = embed_apply(params["embed"], tokens, check=True)
+    else:
+        x = embed_apply(params["embed"], tokens)
+        ok_embed = jnp.array(True)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     cross_src = None
@@ -365,13 +393,22 @@ def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
         cross_src = _encode_frames(params, frames, cfg)
     elif img_emb is not None:
         cross_src = img_emb
-    x, new_cache, aux = _run_groups(params, x, cfg, positions=positions,
-                                    cache=cache, cross_src=cross_src,
-                                    abft=abft, remat=remat,
-                                    x_sharding=x_sharding)
-    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    x, new_cache, aux, ok_run = _run_groups(params, x, cfg,
+                                            positions=positions,
+                                            cache=cache, cross_src=cross_src,
+                                            abft=abft, remat=remat,
+                                            x_sharding=x_sharding,
+                                            invariants=invariants)
+    if invariants:
+        x, ok_fn = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps,
+                                 check=True)
+    else:
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        ok_fn = jnp.array(True)
+    inv_ok = ok_embed & ok_run & ok_fn
     if return_hidden:
-        return x, new_cache, aux
+        return (x, new_cache, aux, inv_ok) if invariants else \
+            (x, new_cache, aux)
     head = params.get("lm_head")
     if head is None:
         logits = (x.astype(jnp.float32) @
@@ -381,7 +418,8 @@ def forward(params, tokens, cfg: ModelConfig, *, positions=None, cache=None,
         logits = unembed_apply(head, x, softcap=cfg.final_softcap, abft=abft)
     if logits_sharding is not None:
         logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
-    return logits, new_cache, aux
+    return (logits, new_cache, aux, inv_ok) if invariants else \
+        (logits, new_cache, aux)
 
 
 def decode_step(params, token, pos, cache, cfg: ModelConfig, *,
@@ -404,14 +442,19 @@ def decode_step(params, token, pos, cache, cfg: ModelConfig, *,
 
 def loss_fn(params, tokens, labels, cfg: ModelConfig, *, frames=None,
             img_emb=None, abft=None, remat: bool = False,
-            aux_weight: float = 0.01, logits_sharding=None, x_sharding=None):
-    logits, _, aux = forward(params, tokens, cfg, frames=frames,
-                             img_emb=img_emb, abft=abft, remat=remat,
-                             logits_sharding=logits_sharding,
-                             x_sharding=x_sharding)
+            aux_weight: float = 0.01, logits_sharding=None, x_sharding=None,
+            invariants: bool = False):
+    """Scalar LM loss; with ``invariants=True`` returns ``(loss, inv_ok)``
+    (value_and_grad has_aux form)."""
+    out = forward(params, tokens, cfg, frames=frames,
+                  img_emb=img_emb, abft=abft, remat=remat,
+                  logits_sharding=logits_sharding,
+                  x_sharding=x_sharding, invariants=invariants)
+    logits, aux = out[0], out[2]
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(nll) + aux_weight * aux
+    loss = jnp.mean(nll) + aux_weight * aux
+    return (loss, out[3]) if invariants else loss
 
 
 def param_count(params) -> int:

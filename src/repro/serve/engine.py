@@ -53,6 +53,7 @@ from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.chaos.faults import SDCInjector, register_surface, scatter_delta
@@ -63,7 +64,7 @@ from repro.models import transformer as tf
 from repro.models.layers import softcap_fn
 from repro.train.step import StepOptions
 
-__all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent"]
+__all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent", "ScrubEvent"]
 
 # the protection domains/surfaces this module owns (repro.chaos drills
 # them): the verified unembed reduction is protected; the KV cache sitting
@@ -79,10 +80,18 @@ register_surface(
          "on logits and the argmax absorbs the residual ulps, so drilled "
          "outputs are bit-identical to clean (tests/test_serve_drill.py)")
 register_surface(
-    "serve.engine/kv_cache_at_rest", owner=__name__, protected=False,
-    note="batched KV cache between decode steps: attention reads it back "
-         "through no checksum (ABFT linearity dies at the softmax), so a "
-         "DRAM flip there silently steers every later token of that slot")
+    "serve.engine/kv_cache_at_rest", owner=__name__, protected=True,
+    promise="tolerance",
+    detector="per-slot fingerprints (fp32 sums over the non-slot axes) "
+             "verified before every decode step, plus a slot-sum checksum "
+             "array per cache leaf: a tripped slot is rebuilt by the "
+             "erasure solve ksum - sum(other slots); armed after every "
+             "legitimate cache mutation (decode, admission scatter)",
+    kinds=("dram_kv_cache",),
+    note="single-slot fault model (one checksum row, like f=1 diskless); "
+         "enabled via ServeEngine(scrub_every=N).  The same cadence "
+         "verifies the params fingerprints and restores a tripped leaf "
+         "from the held origin copy (stand-in for a checkpoint re-fetch)")
 
 
 @dataclasses.dataclass
@@ -126,6 +135,17 @@ class SDCEvent:
 
 
 @dataclasses.dataclass
+class ScrubEvent:
+    """One at-rest scrub trip: where the flip was found and what fixed it."""
+    step: int                 # engine decode step the verify ran at
+    domain: str               # "kv" | "params"
+    leaf: str                 # keystr of the tripped leaf
+    slot: int = -1            # KV slot rebuilt (-1 for params)
+    repaired: bool = False
+    wall_s: float = 0.0       # verify + repair wall
+
+
+@dataclasses.dataclass
 class EngineStats:
     """Per-engine step/FT accounting, reset by `ServeEngine.reset()`.
 
@@ -145,6 +165,8 @@ class EngineStats:
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     tok_s: List[float] = dataclasses.field(default_factory=list)
     events: List[SDCEvent] = dataclasses.field(default_factory=list)
+    scrub_checks: int = 0
+    scrub_events: List[ScrubEvent] = dataclasses.field(default_factory=list)
 
     def clean_step_mean_s(self) -> float:
         xs = self.decode_step_s
@@ -169,6 +191,8 @@ class EngineStats:
             "recovery_latency_ms": 1e3 * self.recovery_latency_s(),
             "ttft_ms": 1e3 * mean(self.ttft_s),
             "tok_per_s": mean(self.tok_s),
+            "scrub_checks": self.scrub_checks,
+            "scrub_repairs": sum(1 for e in self.scrub_events if e.repaired),
         }
 
 
@@ -181,7 +205,7 @@ class ServeEngine:
                  max_len: int = 256, abft_mode: str = "off",
                  abft_backend: str = "auto", mesh: Optional[Mesh] = None,
                  abft_reduce: str = "off", abft_f: int = 2,
-                 sdc: Optional[SDCInjector] = None):
+                 sdc: Optional[SDCInjector] = None, scrub_every: int = 0):
         assert cfg.n_enc_layers == 0, "engine serves decoder-only archs"
         if abft_reduce not in ("off", "verify", "correct"):
             raise ValueError(f"unknown abft_reduce {abft_reduce!r}")
@@ -253,6 +277,22 @@ class ServeEngine:
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
 
+        # at-rest scrub (serve.engine/kv_cache_at_rest + the serve side of
+        # state.params_at_rest): `scrub_every` sets the verify cadence in
+        # decode steps; arming (checksum-on-write) happens after every
+        # legitimate cache mutation regardless.  Params are immutable while
+        # serving, so they arm once: fingerprints for detection plus an
+        # origin copy for repair (the stand-in for a checkpoint re-fetch).
+        self.scrub_every = scrub_every
+        self._kv_sums = {}
+        self._param_fp = {}
+        self._param_origin = None
+        if scrub_every:
+            self._param_fp = self._fingerprints(self.params)
+            self._param_origin = jax.tree.map(
+                lambda x: jnp.array(x, copy=True), self.params)
+            self._arm_kv()
+
         if mesh is not None:
             in_sh = (self._param_sh, self._tok_sh, self._pos_sh,
                      self._cache_sh)
@@ -303,6 +343,8 @@ class ServeEngine:
         self.active = [None] * self.slots
         self.queue = deque()
         self.stats = EngineStats()
+        if self.scrub_every:
+            self._arm_kv()
 
     def warm(self, prompt_len: int = 8, decode_steps: int = 2):
         """Warm BOTH compiled programs (the prefill bucket for `prompt_len`
@@ -383,7 +425,102 @@ class ServeEngine:
                 self._prefill[bucket] = jax.jit(fn)
         return self._prefill[bucket]
 
+    # -- at-rest scrub ---------------------------------------------------------
+    def _fingerprints(self, tree):
+        """fp32 scalar sum per float leaf, keyed by keystr path (the cheap
+        at-rest fingerprint for immutable state: the serving params)."""
+        fps = {}
+        for path, x in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                fps[jax.tree_util.keystr(path)] = jnp.sum(
+                    jnp.asarray(x, jnp.float32))
+        return fps
+
+    def _arm_kv(self):
+        """Checksum-on-write for the KV cache: per-slot fingerprints
+        (detect + locate the tripped slot) and a slot-sum checksum array
+        (the erasure row that repairs it) per float cache leaf."""
+        sums = {}
+        for path, x in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            if (jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2
+                    and x.shape[1] == self.slots):
+                x32 = jnp.asarray(x, jnp.float32)
+                fp = jnp.sum(x32, axis=tuple(range(2, x.ndim)))
+                ks = jnp.sum(x32, axis=1)
+                sums[jax.tree_util.keystr(path)] = (fp, ks)
+        self._kv_sums = sums
+
+    def _scrub_check(self):
+        """Verify-on-read: recompute KV and params fingerprints against the
+        armed values.  A tripped KV slot is rebuilt by the erasure solve
+        ``ksum - sum(other slots)`` (single-slot fault model, like f=1
+        diskless); a tripped params leaf is restored from the origin copy."""
+        t0 = time.perf_counter()
+        self.stats.scrub_checks += 1
+        step = self.stats.decode_steps
+        events: List[ScrubEvent] = []
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        leaves = []
+        for path, x in flat:
+            key = jax.tree_util.keystr(path)
+            armed = self._kv_sums.get(key)
+            if armed is not None:
+                fp_a, ks_a = armed
+                x32 = jnp.asarray(x, jnp.float32)
+                fp = jnp.sum(x32, axis=tuple(range(2, x.ndim)))
+                scale = float(jnp.max(jnp.abs(fp_a))) + 1.0
+                diff = np.asarray(jnp.abs(fp - fp_a))
+                # a flip into the NaN pattern poisons the slot sum; NaN
+                # compares false against any threshold — count it tripped
+                diff = np.where(np.isnan(diff), np.inf, diff)
+                for s in sorted({int(b[1])
+                                 for b in np.argwhere(diff > 1e-4 * scale)}):
+                    # erasure solve over the SURVIVING slots only (zeroing
+                    # the bad slot keeps a NaN/inf flip out of the sum)
+                    live = jnp.sum(x32.at[:, s].set(0.0), axis=1)
+                    x = x.at[:, s].set((ks_a - live).astype(x.dtype))
+                    x32 = jnp.asarray(x, jnp.float32)
+                    events.append(ScrubEvent(step=step, domain="kv",
+                                             leaf=key, slot=s,
+                                             repaired=True))
+            leaves.append(x)
+        if any(e.domain == "kv" for e in events):
+            self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+        pflat, ptd = jax.tree_util.tree_flatten_with_path(self.params)
+        oleaves = jax.tree.leaves(self._param_origin)
+        pleaves = []
+        dirty = False
+        for (path, x), orig in zip(pflat, oleaves):
+            key = jax.tree_util.keystr(path)
+            fp_a = self._param_fp.get(key)
+            if fp_a is not None:
+                fp = jnp.sum(jnp.asarray(x, jnp.float32))
+                d = float(jnp.abs(fp - fp_a))
+                if np.isnan(d) \
+                        or d > 1e-4 * (float(jnp.abs(fp_a)) + 1.0):
+                    x = jnp.array(orig, copy=True)
+                    dirty = True
+                    events.append(ScrubEvent(step=step, domain="params",
+                                             leaf=key, repaired=True))
+            pleaves.append(x)
+        if dirty:
+            params = jax.tree_util.tree_unflatten(ptd, pleaves)
+            if self._param_sh is not None:
+                params = jax.device_put(params, self._param_sh)
+            self.params = params
+
+        if events:
+            wall = time.perf_counter() - t0
+            for e in events:
+                e.wall_s = wall
+            self.stats.detections += len(events)
+            self.stats.corrections += sum(1 for e in events if e.repaired)
+            self.stats.scrub_events.extend(events)
+
     def _admit(self):
+        admitted = False
         for s in range(self.slots):
             if self.active[s] is not None or not self.queue:
                 continue
@@ -405,6 +542,9 @@ class ServeEngine:
             self.tokens = self.tokens.at[s, 0].set(tok)
             self.pos = self.pos.at[s].set(plen)
             self.active[s] = req
+            admitted = True
+        if admitted and self.scrub_every and not self._warming:
+            self._arm_kv()  # re-arm after the admission scatter
 
     def _prefill_impl(self, params, prompt, plen, bucket):
         cache = tf.init_cache(self.cfg, 1, self.max_len)
@@ -492,6 +632,9 @@ class ServeEngine:
 
     # -- step ------------------------------------------------------------------
     def _step(self, finished: List[Request]):
+        if (self.scrub_every and not self._warming
+                and self.stats.decode_steps % self.scrub_every == 0):
+            self._scrub_check()
         t0 = time.perf_counter()
         ev: Optional[SDCEvent] = None
         if self.sdc is not None and not self._warming:
@@ -531,6 +674,8 @@ class ServeEngine:
             self.stats.events.append(ev)
         else:
             self.stats.decode_step_s.append(wall)
+        if self.scrub_every and not self._warming:
+            self._arm_kv()  # re-arm: the decode mutated every live slot
 
         self.pos = self.pos + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)

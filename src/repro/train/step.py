@@ -77,6 +77,12 @@ class StepOptions:
     # Also accepts a TUPLE of such pairs: event j then lands in the j-th
     # protected reduction of the step (multi-collective fault drills).
     sdc_inject: Optional[Tuple] = None
+    # run the models.layers construction invariants inside the forward
+    # (embedding-gather checksum column, every rmsnorm second moment) and
+    # surface the AND of all checks as metrics["inv_ok"].  Rides the
+    # standard grad path only — the deferred manual-DP region does not
+    # thread the flags (raises when combined with defer_grad_reduce).
+    invariant_checks: bool = False
 
     @property
     def remat_arg(self):
@@ -223,6 +229,10 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     if opts.sdc_inject is not None and opts.abft_reduce == "off":
         raise ValueError("sdc_inject corrupts the protected reduction — "
                          "set abft_reduce to 'verify' or 'correct'")
+    if opts.invariant_checks and opts.defer_grad_reduce:
+        raise ValueError("invariant_checks rides the standard grad path; "
+                         "the deferred manual-DP region does not thread "
+                         "the invariant flags")
     cfg = _moe_cfg(cfg, mesh)
     m = opts.microbatches
     assert shape.global_batch % max(m, 1) == 0
@@ -244,27 +254,43 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
             params, batch["tokens"], batch["labels"], cfg,
             frames=batch.get("frames"), img_emb=batch.get("img_emb"),
             abft=opts.abft, remat=opts.remat_arg, aux_weight=opts.aux_weight,
-            logits_sharding=logits_sharding, x_sharding=x_sharding)
+            logits_sharding=logits_sharding, x_sharding=x_sharding,
+            invariants=opts.invariant_checks)
+
+    inv_on = opts.invariant_checks
 
     def _accumulate(loss_fn_, params, batch):
-        """Microbatch scan accumulating fp32 grads (no reduction choices)."""
+        """Microbatch scan accumulating fp32 grads (no reduction choices).
+
+        Returns (loss, grads), or (loss, grads, inv_ok) when the loss fn
+        carries the invariant flag (has_aux form)."""
+        vg = jax.value_and_grad(loss_fn_, has_aux=inv_on)
         if m <= 1:
-            return jax.value_and_grad(loss_fn_)(params, batch)
+            if inv_on:
+                (loss, ok), grads = vg(params, batch)
+                return loss, grads, ok
+            return vg(params, batch)
 
         def split(x):
             return x.reshape((m, x.shape[0] // m) + x.shape[1:])
         mbatch = jax.tree.map(split, batch)
 
         def acc_step(carry, mb):
-            loss_acc, g_acc = carry
-            l, g = jax.value_and_grad(loss_fn_)(params, mb)
+            loss_acc, g_acc, ok_acc = carry
+            if inv_on:
+                (l, ok_mb), g = vg(params, mb)
+                ok_acc = ok_acc & ok_mb
+            else:
+                l, g = vg(params, mb)
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-            return (loss_acc + l, g_acc), None
+            return (loss_acc + l, g_acc, ok_acc), None
 
         g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (loss, grads), _ = lax.scan(acc_step, (jnp.zeros(()), g0), mbatch)
-        return loss / m, jax.tree.map(lambda g: g / m, grads)
+        (loss, grads, ok), _ = lax.scan(
+            acc_step, (jnp.zeros(()), g0, jnp.array(True)), mbatch)
+        loss, grads = loss / m, jax.tree.map(lambda g: g / m, grads)
+        return (loss, grads, ok) if inv_on else (loss, grads)
 
     if opts.defer_grad_reduce:
         dp = shd.dp_axes(mesh)
@@ -390,10 +416,13 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         params = state["params"]
         new_res = None
         reduce_ok = None
+        inv_ok = None
         if "ef_residual" in state:
             loss, grads, new_res = grad_fn(params, batch, state["ef_residual"])
         elif abft_reduce_on:
             loss, grads, reduce_ok = grad_fn(params, batch)
+        elif inv_on:
+            loss, grads, inv_ok = grad_fn(params, batch)
         else:
             loss, grads = grad_fn(params, batch)
         new_params, new_opt, metrics = adamw_update(
@@ -405,6 +434,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         metrics = dict(metrics, loss=loss)
         if reduce_ok is not None:
             metrics["abft_ok"] = reduce_ok
+        if inv_ok is not None:
+            metrics["inv_ok"] = inv_ok.astype(jnp.float32)
         return new_state, metrics
 
     state_shapes = jax.eval_shape(
@@ -421,6 +452,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                  "loss": NamedSharding(mesh, P())}
     if abft_reduce_on:
         metric_sh["abft_ok"] = NamedSharding(mesh, P())
+    if inv_on:
+        metric_sh["inv_ok"] = NamedSharding(mesh, P())
     out_shardings = (state_sh, metric_sh)
     return step_fn, in_shardings, out_shardings
 

@@ -1,10 +1,14 @@
-"""Pallas flash-attention kernel vs dense oracle (interpret mode)."""
+"""Pallas flash-attention kernel vs dense oracle (interpret mode), plus
+the checksummed variant's detect-and-recompute path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (FLASH_CHECK_TOL,
+                                           flash_attention_checked,
+                                           flash_attention_pallas)
+from repro.models.attention import _mask
 
 
 def _ref(q, k, v, scale, causal, window, softcap):
@@ -18,14 +22,17 @@ def _ref(q, k, v, scale, causal, window, softcap):
     if causal:
         m &= qp[:, None] >= kp[None, :]
     if window is not None:
+        # two-sided band, matching models.attention._mask: bounding only
+        # qp - kp would let a non-causal window attend to far-future keys
         m &= qp[:, None] - kp[None, :] < window
+        m &= kp[None, :] - qp[:, None] < window
     s = jnp.where(m[None], s, -1e30)
     return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1),
                       v.astype(jnp.float32))
 
 
 CASES = [(True, None, None), (True, 384, None), (True, None, 50.0),
-         (False, None, None), (True, 100, 30.0)]
+         (False, None, None), (True, 100, 30.0), (False, 100, None)]
 
 
 @pytest.mark.parametrize("causal,window,softcap", CASES)
@@ -56,3 +63,68 @@ def test_rectangular_kv(rs):
     r = _ref(q, k, v, 0.125, False, None, None)
     np.testing.assert_allclose(np.asarray(o), np.asarray(r),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 100),
+                                           (False, 100), (False, None)])
+def test_masking_parity_with_attention_reference(rs, causal, window):
+    """The kernel's in-tile mask must agree with models.attention._mask
+    (the model-side reference semantics) for every (causal, window)
+    combination — including the non-causal window band, where a one-sided
+    bound would silently admit far-future keys."""
+    BH, S, D = 2, 256, 64
+    q = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    o = flash_attention_pallas(q, k, v, scale=D ** -0.5, causal=causal,
+                               window=window, bq=128, bk=128,
+                               interpret=True)
+    m = _mask(jnp.arange(S), jnp.arange(S), causal=causal, window=window)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * D ** -0.5
+    s = jnp.where(m[None], s, -1e30)
+    r = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window,softcap", [(True, None, None),
+                                                   (True, 100, 30.0),
+                                                   (False, None, None)])
+def test_checked_clean_matches_plain(rs, causal, window, softcap):
+    """Checksum recurrence on, no fault: identical output, quiet report."""
+    BH, S, D = 2, 512, 64
+    q = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    plain = flash_attention_pallas(q, k, v, scale=D ** -0.5, causal=causal,
+                                   window=window, softcap=softcap,
+                                   bq=128, bk=128, interpret=True)
+    o, rep = flash_attention_checked(q, k, v, scale=D ** -0.5,
+                                     causal=causal, window=window,
+                                     softcap=softcap, bq=128, bk=128,
+                                     interpret=True)
+    assert rep.ok and rep.repaired == 0
+    assert rep.max_pv_residual < FLASH_CHECK_TOL
+    assert rep.max_rowsum_residual < FLASH_CHECK_TOL
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(plain))
+
+
+@pytest.mark.parametrize("target", ["acc", "l"])
+def test_checked_detects_and_repairs_state_flip(rs, target):
+    """A flip-sized delta into the VMEM acc / rowsum scratch mid-sweep
+    trips the epilogue residual on exactly the poisoned q-tile, and the
+    dense recompute patches the output back to the clean result."""
+    BH, S, D = 2, 512, 64
+    q = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    k = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    v = jnp.asarray(rs.standard_normal((BH, S, D)), jnp.float32)
+    clean = flash_attention_pallas(q, k, v, scale=D ** -0.5, causal=True,
+                                   bq=128, bk=128, interpret=True)
+    o, rep = flash_attention_checked(q, k, v, scale=D ** -0.5, causal=True,
+                                     bq=128, bk=128, interpret=True,
+                                     inject=(1, 1, 1e4, target))
+    assert not rep.ok
+    assert rep.detected == ((0, 1),)      # (bh=0, q-tile 1), nothing else
+    assert rep.repaired == 1
+    np.testing.assert_allclose(np.asarray(o), np.asarray(clean),
+                               rtol=1e-5, atol=1e-5)
