@@ -1,18 +1,25 @@
 """Chaos-campaign smoke rows: the single-device FaultSpace swept end-to-end.
 
-Runs `repro.chaos.campaign.CampaignRunner` over `FaultSpace.smoke()` (nine
-fault classes, both workloads, no pod axis needed) and emits one row per
-classified event plus the campaign-level coverage counters.  The counters
-are the contract the full CI campaign gates on — since PR 6 the ledger is
-retired, so `missed_anywhere`, `false_alarms` AND `uncovered_surfaces`
-must all be 0 here too; a regression in any detection path shows up in
-every bench run, not only in the 8-device chaos-campaign job.
+Runs `repro.chaos.campaign.CampaignRunner` over `FaultSpace.smoke()` (the
+single-device fault classes across train + serve + the CG solver family,
+no pod axis needed) PLUS the single-device episode smoke set (one
+overlapping multi-fault episode and one Poisson rate schedule per
+workload) and emits one row per classified event, per-episode recovery
+latency, the sustained-rate-at-parity summary, and the campaign-level
+coverage counters.  The counters are the contract the full CI campaign
+gates on — since PR 6 the ledger is retired, so `missed_anywhere`,
+`false_alarms` AND `uncovered_surfaces` must all be 0 here too (and since
+PR 7 every episode must come out `corrected`); a regression in any
+detection path shows up in every bench run, not only in the 8-device
+chaos-campaign job.
 
 Rows:
-  chaos/<event-name>          us = event wall, derived = outcome
-  chaos/recovery/<rung>       us = measured recovery latency for that rung
+  chaos/<event-name>            us = event wall, derived = outcome
+  chaos/recovery/<rung>         us = measured recovery latency for that rung
+  chaos/episode/<name>          us = episode recovery latency, derived = outcome
+  chaos/sustained_rate/<wl>     value = events-per-1k-steps held at parity
   chaos/specs | corrected | detected | missed_anywhere |
-  chaos/false_alarms | uncovered_surfaces
+  chaos/false_alarms | uncovered_surfaces | episodes_not_corrected
 """
 
 
@@ -21,29 +28,46 @@ def run():
 
     from repro.chaos.campaign import CampaignRunner
     from repro.chaos.faults import FaultSpace
-    from repro.chaos.report import summarize
+    from repro.chaos.report import episodes, summarize
 
     t0 = time.time()
-    res = CampaignRunner(FaultSpace.smoke()).run()
+    space = FaultSpace("smoke+episodes", FaultSpace.smoke().specs,
+                       episodes=FaultSpace.episodes_smoke().episodes)
+    res = CampaignRunner(space).run()
     wall = time.time() - t0
     rows = []
     for ev in res.results:
         rows.append((f"chaos/{ev.name}", round(ev.wall_s * 1e6, 1),
                      f"outcome={ev.outcome}"))
+        if ev.kind == "episode":
+            continue                      # episode rungs aggregated below
         if ev.recovery_latency_s is not None and ev.rung:
             rows.append((f"chaos/recovery/{ev.workload}:{ev.rung}",
                          round(ev.recovery_latency_s * 1e6, 1),
                          f"rung latency ({ev.kind})"))
+    eps = episodes(res.results)
+    for e in eps["episodes"]:
+        lat = e["recovery_latency_s"]
+        rows.append((f"chaos/episode/{e['episode']}",
+                     round(lat * 1e6, 1) if lat is not None else 0.0,
+                     f"episode recovery latency; outcome={e['outcome']}, "
+                     f"{e['n_events']} events via {e['rung'] or '-'}"))
+    for wl, st in eps["sustained_rate_at_parity"].items():
+        rows.append((f"chaos/sustained_rate/{wl}",
+                     st["sustained_rate_per_1k"],
+                     f"events/1k steps sustained at parity "
+                     f"(tested {st['rates_tested']})"))
     summ = summarize(res.results)
     o = summ["by_outcome"]
     n_missed = len(summ["missed_anywhere"])
     n_fa = len(summ["false_alarms"])
+    n_ep_bad = len(eps["not_corrected"])
     from repro.chaos.faults import uncovered_surfaces
     n_ledger = len(uncovered_surfaces())
     rows += [
         ("chaos/specs", round(wall * 1e6, 1),
-         f"{summ['n_fault_kinds']} fault kinds over "
-         f"{'+'.join(summ['workloads'])}"),
+         f"{summ['n_fault_kinds']} fault kinds + {eps['n_episodes']} "
+         f"episodes over {'+'.join(summ['workloads'])}"),
         ("chaos/corrected", o["corrected"], "faults detected AND repaired "
          "within the domain promise"),
         ("chaos/detected", o["detected"], "faults seen but (by design) not "
@@ -54,9 +78,12 @@ def run():
          "MUST BE 0: detections on clean sweeps"),
         ("chaos/uncovered_surfaces", n_ledger,
          "MUST BE 0: registered surfaces with no protection"),
+        ("chaos/episodes_not_corrected", n_ep_bad,
+         "MUST BE 0: every multi-fault episode jointly recovered"),
     ]
-    if n_missed or n_fa or n_ledger:
+    if n_missed or n_fa or n_ledger or n_ep_bad:
         raise AssertionError(
             f"chaos gate: missed_anywhere={n_missed} "
-            f"false_alarms={n_fa} uncovered={n_ledger} — {summ}")
+            f"false_alarms={n_fa} uncovered={n_ledger} "
+            f"episodes_not_corrected={eps['not_corrected']} — {summ}")
     return rows

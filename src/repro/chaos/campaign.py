@@ -38,18 +38,24 @@ import dataclasses
 import math
 import tempfile
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.chaos.faults import (FailureInjector, FaultSpace, FaultSpec,
-                                SDCInjector, ensure_registered, flip_bit,
-                                get_surface)
+from repro.chaos.faults import (Episode, FailureInjector, FaultSpace,
+                                FaultSpec, SDCInjector, SDCPlan,
+                                ensure_registered, flip_bit, get_surface)
 
 __all__ = ["TrainConfig", "ServeConfig", "FaultResult", "CampaignResult",
-           "CampaignRunner", "classify"]
+           "CampaignRunner", "classify", "episode_outcome", "SOLVER_TOL"]
+
+# end-state tolerance for the solver workload: both the drilled and the
+# golden solve converge to ||b - A x|| <= rtol*||b||, so their iterates
+# agree to ~rtol*||b||/lambda_min — 1e-4 leaves two orders of slack over
+# that bound for the float64 1D Poisson smoke system
+SOLVER_TOL = 1e-4
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +113,9 @@ class FaultResult:
     wall_s: float
     spec: Optional[dict] = None  # the originating FaultSpec (None = sweep)
     note: str = ""
+    episode: Optional[str] = None  # episode this event belongs to (None =
+    #                                standalone); episode-level rows carry
+    #                                their own name here too
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -159,6 +168,37 @@ def classify(*, injected: bool, detected: bool, corrected: bool,
     return "detected"
 
 
+def episode_outcome(event_outcomes: Sequence[str], *, end_ok: bool,
+                    false_alarms: int = 0) -> str:
+    """Joint outcome of a multi-fault episode, from its events' outcomes.
+
+    * **corrected** — every delivered event was corrected or *absorbed*
+      (its corruption was erased by a co-occurring recovery's rollback
+      before any detector needed to see it), the JOINT end state honors
+      the workload's promise, and no detector fired without a cause;
+    * **missed** — at least one event ran to completion undetected.  A
+      second fault landing while another fault's recovery is in flight is
+      attributed to the episode (absorbed/corrected), never reported as a
+      spurious miss;
+    * **detected** — everything was seen but a repair or the joint end
+      state fell short;
+    * **false_alarm** — a detector fired with no event to blame.
+
+    Events that never fired are "skipped" and don't count against the
+    episode (they stay visible as their own rows).
+    """
+    outs = [o for o in event_outcomes if o != "skipped"]
+    if not outs:
+        return "skipped"
+    if any(o == "missed" for o in outs):
+        return "missed"
+    if false_alarms:
+        return "false_alarm"
+    if all(o in ("corrected", "absorbed") for o in outs) and end_ok:
+        return "corrected"
+    return "detected"
+
+
 def _compare_trees(a, b, tol: float) -> Tuple[str, Optional[float]]:
     """Host-side leafwise comparison -> (end_state, max_abs_diff);
     diff is None when the divergence is unmeasurable (NaN/inf/integer)."""
@@ -203,6 +243,7 @@ class CampaignRunner:
         self.verbose = verbose
         self._train_golden: Dict[tuple, dict] = {}
         self._serve_golden: Dict[tuple, dict] = {}
+        self._solver_golden: Optional[dict] = None
         self._serve_eng = None      # the warmed drill-free engine, reused
         self._serve_scrub_eng = None  # ditto with the at-rest scrubber on
         self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
@@ -213,7 +254,7 @@ class CampaignRunner:
 
     # -- public ---------------------------------------------------------------
 
-    def run(self, workloads: Tuple[str, ...] = ("train", "serve")
+    def run(self, workloads: Tuple[str, ...] = ("train", "serve", "solver")
             ) -> CampaignResult:
         t0 = time.time()
         results: List[FaultResult] = []
@@ -231,6 +272,19 @@ class CampaignRunner:
                 self._log(f"  -> {res.outcome} (rung={res.rung}, "
                           f"end={res.end_state})")
                 results.append(res)
+            for ep in self.space.episodes:
+                if ep.workload not in workloads:
+                    continue
+                self._log(f"episode {ep.name}")
+                t1 = time.time()
+                try:
+                    rows = self._run_episode(ep)
+                except _Skip as sk:
+                    rows = [self._skipped_episode(ep, str(sk))]
+                rows[-1].wall_s = time.time() - t1   # the episode-level row
+                self._log(f"  -> {rows[-1].outcome} "
+                          f"({len(rows) - 1} event(s))")
+                results.extend(rows)
             # every golden run doubles as a clean sweep: report it
             results.extend(self._clean_rows(workloads))
         finally:
@@ -245,6 +299,9 @@ class CampaignRunner:
             "n_devices": len(jax.devices()),
             "train": dataclasses.asdict(self.train),
             "serve": dataclasses.asdict(self.serve),
+            "solver": dataclasses.asdict(self._solver_cfg("anti")),
+            "n_episodes": sum(1 for ep in self.space.episodes
+                              if ep.workload in workloads),
             "wall_s": time.time() - t0,
         }
         return CampaignResult(space=self.space.name, results=results,
@@ -253,6 +310,8 @@ class CampaignRunner:
     # -- dispatch -------------------------------------------------------------
 
     def _run_spec(self, spec: FaultSpec) -> FaultResult:
+        if spec.workload == "solver":
+            return self._run_solver(spec)
         if spec.workload == "serve":
             return self._run_serve(spec)
         if spec.kind == "checksum_state_flip":
@@ -351,15 +410,18 @@ class CampaignRunner:
         return FTPolicy(diskless_every=1, disk_every=10 ** 6,
                         scrub_every=1)
 
-    def _golden_train(self, mesh_shape, names, tag) -> dict:
-        """Clean run for one (mesh, opts) configuration, cached.  The
-        "scrub" tag runs the at-rest scrubber's full cadence (encode +
+    def _golden_train(self, mesh_shape, names, tag, steps=None) -> dict:
+        """Clean run for one (mesh, opts, horizon) configuration, cached.
+        The "scrub" tag runs the at-rest scrubber's full cadence (encode +
         verify every step) so its clean sweep doubles as the false-alarm
-        check for the DRAM detectors."""
-        key = (tuple(mesh_shape), tag)
+        check for the DRAM detectors.  Episodes whose last event lands
+        beyond the standard workload pass a longer ``steps`` horizon —
+        each horizon is its own golden (and its own clean-sweep row)."""
+        steps = self.train.steps if steps is None else steps
+        key = (tuple(mesh_shape), tag, steps)
         if key in self._train_golden:
             return self._train_golden[key]
-        self._log(f"golden train {mesh_shape} [{tag}]")
+        self._log(f"golden train {mesh_shape} [{tag}] {steps} steps")
         scrub = tag == "scrub"
         rt = self._train_runtime(mesh_shape, names, tag,
                                  policy=self._scrub_policy() if scrub
@@ -368,7 +430,7 @@ class CampaignRunner:
             state = rt.init_state(0)
             oks, walls, losses = [], [], []
             scrub_trips, scrub_walls = 0, []
-            for i in range(self.train.steps):
+            for i in range(steps):
                 if scrub:
                     rt.checkpoint(i, state)
                     t0 = time.perf_counter()
@@ -387,7 +449,8 @@ class CampaignRunner:
                  "oks": oks,
                  "detections": sum(1 for o in oks if not o) + scrub_trips,
                  "scrub_trips": scrub_trips, "scrub_walls": scrub_walls,
-                 "mesh_shape": tuple(mesh_shape), "tag": tag}
+                 "mesh_shape": tuple(mesh_shape), "tag": tag,
+                 "steps": steps}
         finally:
             rt.close()
         self._train_golden[key] = g
@@ -938,6 +1001,643 @@ class CampaignRunner:
                      f"{'unchanged' if end_state == 'bit_identical' else 'diverged'}")
         raise ValueError(f"unhandled serve kind {spec.kind!r}")
 
+    # -- solver workload (second protected algorithm family) ------------------
+
+    def _solver_cfg(self, placement: str):
+        from repro.solvers import SolverConfig
+        return SolverConfig(placement=placement)
+
+    def _make_solver(self, placement: str):
+        from repro.solvers import RedundantSubspaceCG
+        return RedundantSubspaceCG(self._solver_cfg(placement))
+
+    def _golden_solver(self) -> dict:
+        """Clean redundant-subspace CG solve, cached.  Replicas are exact
+        copies, so clean numerics are placement-independent: one golden
+        serves both the anti and paired drills, and it doubles as the
+        solver clean sweep (any guard/replica trip on it is a false
+        alarm)."""
+        if self._solver_golden is None:
+            self._log("golden solver (redundant-subspace CG)")
+            t0 = time.perf_counter()
+            s = self._make_solver("anti")
+            rep = s.run()
+            wall = time.perf_counter() - t0
+            self._solver_golden = {
+                "x": s.x.copy(), "iterations": rep.iterations,
+                "residual": rep.residual_norm, "trips": len(rep.trips),
+                "converged": rep.converged, "wall_s": wall,
+                "s_per_iter": wall / max(rep.iterations, 1)}
+        return self._solver_golden
+
+    @staticmethod
+    def _solver_alive_target(solver, spec: FaultSpec):
+        """(subspace, replica, retargeted) of an alive worker, preferring
+        the spec's aimed subspace — a fault cannot land on dead hardware,
+        so an aim at a dead worker is re-aimed (and noted), never
+        silently dropped."""
+        want = spec.shard % solver.cfg.n_subspaces
+        order = sorted(solver.alive_subspaces(),
+                       key=lambda i: (i != want, i))
+        if not order:
+            raise _Skip("no alive solver worker to target")
+        sub = order[0]
+        w = solver.alive_workers(sub)[0]
+        return sub, w.replica, sub != want
+
+    @staticmethod
+    def _solver_survivable_pod(solver, want: int):
+        """A pod whose loss keeps every unknown covered, preferring the
+        aimed pod.  Mirrors a redundancy-aware scheduler: a correlated
+        loss that would void the cover entirely is re-aimed, because a
+        platform running this solver would never co-locate the last two
+        covers of an index once a pod is already down."""
+        pods = sorted({w.pod for w in solver.workers if w.alive},
+                      key=lambda p: (p != want % solver.cfg.pods, p))
+        for pod in pods:
+            cover = np.zeros(solver.cfg.n)
+            for w in solver.workers:
+                if w.alive and w.pod != pod:
+                    cover[solver.blocks[w.subspace]] += 1.0
+            if np.all(cover > 0):
+                return pod, pod != want % solver.cfg.pods
+        return None, False
+
+    def _deliver_solver_event(self, solver, spec: FaultSpec) -> dict:
+        """Inject one spec into the live solver at the CURRENT iteration.
+        Returns {"desc", "retargeted", "pod", "sub"} — "pod" is the pod
+        actually lost (pod_loss only, drives the revive schedule), "sub"
+        the targeted subspace (sdc only, for trip attribution)."""
+        kind = spec.kind
+        if kind == "sdc_collective":
+            sub, rep, moved = self._solver_alive_target(solver, spec)
+            solver.inject_correction_sdc(sub, rep, index=1, delta=spec.delta)
+            return {"desc": f"sdc into s{sub}r{rep} correction",
+                    "retargeted": moved, "pod": None, "sub": sub}
+        if kind == "dram_params":
+            idx = int(np.argmax(np.abs(solver.x)))
+            # exponent-field flip of the largest |x_j|, chosen to be
+            # catastrophic at ANY iteration: for |x| < 2 the top exponent
+            # bit (62) is clear, setting it scales by ~2^1024 (inf); for
+            # |x| >= 2 bit 62 is SET (flipping it would shrink), so take
+            # exponent bit 9 (61) instead — clear for every |x| < 2^513,
+            # setting it scales by 2^512
+            bit = 62 if abs(float(solver.x[idx])) < 2.0 else 61
+            val = solver.corrupt_iterate(idx, bit=bit)
+            return {"desc": f"x[{idx}] bit {bit} flip -> {val:.3e}",
+                    "retargeted": False, "pod": None, "sub": None}
+        if kind == "shard_loss":
+            sub, rep, moved = self._solver_alive_target(solver, spec)
+            solver.lose_worker(sub, rep, mid_iteration=True)
+            return {"desc": f"worker s{sub}r{rep} lost mid-iteration",
+                    "retargeted": moved, "pod": None, "sub": sub}
+        if kind == "pod_loss":
+            pod, moved = self._solver_survivable_pod(solver, spec.pod)
+            if pod is None:
+                raise _Skip("no survivable pod to lose (every loss would "
+                            "void the cover)")
+            info = solver.lose_pod(pod)
+            return {"desc": f"pod {pod} lost ({len(info['killed'])} "
+                            f"worker(s), dead subspaces "
+                            f"{info['dead_subspaces']})",
+                    "retargeted": moved, "pod": pod, "sub": None,
+                    "info": info}
+        raise _Skip(f"solver workload has no adapter for kind {kind!r}")
+
+    def _run_solver(self, spec: FaultSpec) -> FaultResult:
+        """One fault into a live redundant-subspace CG solve.  All repair
+        is continue-through (failover / re-weight / replica repair /
+        guard restart) — the solve must converge WITHOUT rollback and
+        land within SOLVER_TOL of the clean golden iterate."""
+        golden = self._golden_solver()
+        fire_at = max(spec.step, 2) if spec.kind == "dram_params" \
+            else spec.step
+        if fire_at >= golden["iterations"]:
+            raise _Skip(f"fire iteration {fire_at} >= clean convergence "
+                        f"at {golden['iterations']}: fault would never "
+                        f"inject")
+        placement = "paired" if spec.variant == "paired" else "anti"
+        s = self._make_solver(placement)
+        delivered: dict = {}
+        revive_at: Dict[int, List[int]] = {}
+
+        def hook(sv):
+            it = sv.iteration
+            for pod in revive_at.pop(it, []):
+                sv.revive_pod(pod)
+            if it == fire_at and "info" not in delivered:
+                delivered["info"] = self._deliver_solver_event(sv, spec)
+                pod = delivered["info"]["pod"]
+                if pod is not None:
+                    revive_at.setdefault(it + 3, []).append(pod)
+
+        rep = s.run(on_iteration=hook)
+        if "info" not in delivered:
+            raise _Skip(f"event at iteration {fire_at} never fired "
+                        f"(converged at {rep.iterations})")
+        info = delivered["info"]
+        if spec.kind == "sdc_collective":
+            hits = [t for t in rep.trips
+                    if t.kind in ("replica_repair", "local_recompute")]
+            detected = bool(hits)
+            rung = f"solver:{hits[0].kind}" if hits else None
+        elif spec.kind == "dram_params":
+            hits = [t for t in rep.trips if t.kind == "guard_restart"]
+            detected = bool(hits)
+            rung = "solver:guard_restart" if hits else None
+        elif spec.kind == "pod_loss":
+            detected = True     # platform-signaled
+            rungs = info["info"]["rungs"]
+            rung = ("solver:reweight" if "solver:reweight" in rungs
+                    else "solver:failover")
+        else:   # shard_loss, platform-signaled mid-iteration
+            detected = True
+            rung = ("solver:reweight" if rep.reweights
+                    else "solver:failover")
+        corrected = detected and rep.converged
+        diff = float(np.max(np.abs(s.x - golden["x"])))
+        end_state = ("bit_identical" if diff == 0.0 else
+                     "within_tol" if diff <= SOLVER_TOL else "diverged")
+        extra = max(rep.iterations - golden["iterations"], 0)
+        latency = extra * golden["s_per_iter"] if detected else None
+        return self._result(
+            spec, detected=detected, corrected=corrected, rung=rung,
+            latency=latency, end_state=end_state, max_abs_diff=diff,
+            note=f"{info['desc']}"
+                 + ("; retargeted" if info["retargeted"] else "")
+                 + f"; converged through in {rep.iterations} it "
+                   f"(clean {golden['iterations']}, +{extra}), "
+                   f"{len(rep.trips)} trip(s), no rollback")
+
+    # -- multi-fault episodes -------------------------------------------------
+
+    def _run_episode(self, ep: Episode) -> List[FaultResult]:
+        """Deliver every event of one episode into ONE live run and
+        classify both the per-event recoveries and the joint end state.
+        Returns the per-event rows followed by the episode-level row."""
+        if ep.workload == "train":
+            return self._episode_train(ep)
+        if ep.workload == "serve":
+            return self._episode_serve(ep)
+        return self._episode_solver(ep)
+
+    def _skipped_episode(self, ep: Episode, why: str) -> FaultResult:
+        return FaultResult(
+            name=f"episode:{ep.name}", workload=ep.workload, kind="episode",
+            surface=f"episode/{ep.workload}", protected=True,
+            promise="bit_identity" if ep.workload == "serve"
+            else "tolerance",
+            outcome="skipped", detected=False, corrected=False, rung=None,
+            recovery_latency_s=None, end_state="not_compared",
+            max_abs_diff=None, wall_s=0.0, spec=ep.asdict(), note=why,
+            episode=ep.name)
+
+    @staticmethod
+    def _fresh_events(specs) -> List[dict]:
+        return [dict(fired=False, detected=False, corrected=False,
+                     absorbed=False, rung=None, latency=None, note="")
+                for _ in specs]
+
+    def _episode_event_row(self, ep: Episode, spec: FaultSpec, idx: int, *,
+                           fired, detected, corrected, absorbed, rung,
+                           latency, note) -> FaultResult:
+        s = get_surface(spec.surface)
+        if not fired:
+            outcome = "skipped"
+        elif absorbed:
+            outcome = "absorbed"
+        elif not detected:
+            outcome = "missed"
+        elif corrected:
+            outcome = "corrected"
+        else:
+            outcome = "detected"
+        return FaultResult(
+            name=f"{ep.name}::e{idx}:{spec.kind}", workload=ep.workload,
+            kind=spec.kind, surface=spec.surface, protected=s.protected,
+            promise=s.promise, outcome=outcome, detected=detected,
+            corrected=corrected, rung=rung, recovery_latency_s=latency,
+            end_state="not_compared", max_abs_diff=None, wall_s=0.0,
+            spec=spec.asdict(), note=note, episode=ep.name)
+
+    def _episode_row(self, ep: Episode, event_rows, *, end_state, diff,
+                     note="", false_alarms=0) -> FaultResult:
+        promise = ("bit_identity" if ep.workload == "serve"
+                   else "tolerance")
+        outcome = episode_outcome([r.outcome for r in event_rows],
+                                  end_ok=_end_ok(promise, end_state),
+                                  false_alarms=false_alarms)
+        rungs = sorted({r.rung for r in event_rows if r.rung})
+        lats = [r.recovery_latency_s for r in event_rows
+                if r.recovery_latency_s is not None]
+        return FaultResult(
+            name=f"episode:{ep.name}", workload=ep.workload, kind="episode",
+            surface=f"episode/{ep.workload}", protected=True,
+            promise=promise, outcome=outcome,
+            detected=any(r.detected for r in event_rows),
+            corrected=outcome == "corrected",
+            rung="+".join(rungs) if rungs else None,
+            recovery_latency_s=sum(lats) if lats else None,
+            end_state=end_state, max_abs_diff=diff, wall_s=0.0,
+            spec=ep.asdict(), note=note, episode=ep.name)
+
+    def _episode_solver(self, ep: Episode) -> List[FaultResult]:
+        """All events into one live CG solve: pod losses are delivered
+        synchronously (platform signal), SDC/DRAM/worker-loss events are
+        attributed by diffing the solver's trip/failover logs around the
+        iteration they land in.  Lost pods revive three iterations later
+        (the re-grow path), which is what makes correlated repeat-pod
+        episodes meaningful."""
+        golden = self._golden_solver()
+        specs = ep.resolved()
+        placement = ("paired" if any(sp.variant == "paired" for sp in specs)
+                     else "anti")
+        s = self._make_solver(placement)
+        sched: Dict[int, List[int]] = {}
+        for j, sp in enumerate(specs):
+            at = max(sp.step, 2) if sp.kind == "dram_params" else sp.step
+            sched.setdefault(at, []).append(j)
+        revive_at: Dict[int, List[int]] = {}
+        ev = self._fresh_events(specs)
+        t0 = time.perf_counter()
+        while not s.converged and s.iteration < s.cfg.max_iters:
+            it = s.iteration
+            for pod in revive_at.pop(it, []):
+                s.revive_pod(pod)
+            todo = sched.pop(it, [])
+            # pod losses first: they log their rungs synchronously, so
+            # the failover/reweight diff below stays attributable to the
+            # queued (mid-iteration) events
+            for j in todo:
+                sp = specs[j]
+                if sp.kind != "pod_loss":
+                    continue
+                try:
+                    info = self._deliver_solver_event(s, sp)
+                except _Skip as sk:
+                    ev[j]["note"] = str(sk)
+                    continue
+                rungs = info["info"]["rungs"]
+                ev[j].update(
+                    fired=True, detected=True, corrected=True,
+                    rung=("solver:reweight" if "solver:reweight" in rungs
+                          else "solver:failover"),
+                    note=info["desc"] + (" (retargeted)"
+                                         if info["retargeted"] else ""))
+                revive_at.setdefault(it + 3, []).append(info["pod"])
+            pend = []
+            trips0 = len(s.trips)
+            rw0 = len(s.reweights)
+            for j in todo:
+                sp = specs[j]
+                if sp.kind == "pod_loss":
+                    continue
+                try:
+                    info = self._deliver_solver_event(s, sp)
+                except _Skip as sk:
+                    ev[j]["note"] = str(sk)
+                    continue
+                ev[j]["fired"] = True
+                ev[j]["note"] = info["desc"] + (
+                    " (retargeted)" if info["retargeted"] else "")
+                ev[j]["sub"] = info["sub"]
+                pend.append(j)
+            s.iterate()
+            if pend:
+                new_trips = s.trips[trips0:]
+                for j in pend:
+                    sp = specs[j]
+                    if sp.kind == "sdc_collective":
+                        hits = [t for t in new_trips
+                                if t.kind in ("replica_repair",
+                                              "local_recompute")
+                                and f"subspace {ev[j]['sub']}" in t.detail]
+                        if hits:
+                            ev[j].update(detected=True, corrected=True,
+                                         rung=f"solver:{hits[0].kind}")
+                    elif sp.kind == "dram_params":
+                        hits = [t for t in new_trips
+                                if t.kind == "guard_restart"]
+                        if hits:
+                            ev[j].update(detected=True, corrected=True,
+                                         rung="solver:guard_restart")
+                    elif sp.kind == "shard_loss":
+                        # platform-signaled; the kill was queued into the
+                        # iterate we just ran
+                        ev[j].update(
+                            detected=True, corrected=True,
+                            rung=("solver:reweight"
+                                  if len(s.reweights) > rw0
+                                  else "solver:failover"))
+        wall = time.perf_counter() - t0
+        rep = s.report()
+        diff = float(np.max(np.abs(s.x - golden["x"])))
+        end_state = ("bit_identical" if diff == 0.0 else
+                     "within_tol" if diff <= SOLVER_TOL else "diverged")
+        # an event that never fired stays fired=False -> its row says
+        # "skipped" (visible, not silently dropped)
+        for j in (j for js in sched.values() for j in js):
+            if not ev[j]["note"]:
+                ev[j]["note"] = (f"never fired: solve converged at "
+                                 f"iteration {rep.iterations}")
+        extra = max(rep.iterations - golden["iterations"], 0)
+        rows = [self._episode_event_row(
+            ep, sp, j, fired=e["fired"], detected=e["detected"],
+            corrected=e["corrected"], absorbed=e["absorbed"],
+            rung=e["rung"], latency=e["latency"], note=e["note"])
+            for j, (sp, e) in enumerate(zip(specs, ev))]
+        ep_row = self._episode_row(
+            ep, rows, end_state=end_state, diff=diff,
+            note=f"placement {placement}; converged={rep.converged} in "
+                 f"{rep.iterations} it (clean {golden['iterations']}, "
+                 f"+{extra}), {len(rep.trips)} trip(s), rungs "
+                 f"{sorted(set(rep.rungs))}, no rollback")
+        ep_row.recovery_latency_s = extra * golden["s_per_iter"]
+        ep_row.wall_s = wall
+        return rows + [ep_row]
+
+    def _episode_train(self, ep: Episode) -> List[FaultResult]:
+        """All events through ONE live ElasticRuntime loop.  Per-step
+        order: re-grow -> encode (clean) -> DRAM flips -> pod loss ->
+        shard failures -> scrub -> (drilled) step.  A pod-loss or
+        shard-loss recovery restores the step's pre-flip encode, so a
+        DRAM flip landing in the same window is ABSORBED by the rollback
+        — attributed to the episode, not reported as a miss."""
+        from repro.ft.runtime import FTPolicy
+        from repro.train.step import build_train_step, make_inputs
+
+        specs = ep.resolved()
+        kinds = {sp.kind for sp in specs}
+        supported = {"sdc_collective", "dram_params", "dram_opt_state",
+                     "shard_loss", "pod_loss"}
+        if kinds - supported:
+            raise _Skip(f"no train episode adapter for kinds "
+                        f"{sorted(kinds - supported)}")
+        needs_sdc = "sdc_collective" in kinds
+        needs_pod = "pod_loss" in kinds
+        if needs_sdc and needs_pod:
+            raise _Skip(
+                "pinned XLA cannot lower the protected step on the pod "
+                "mesh (ROADMAP 'jax uprev'): sdc_collective and pod_loss "
+                "cannot share one train episode")
+        if needs_pod:
+            need = math.prod(self.train.pod_mesh)
+            if len(jax.devices()) < need:
+                raise _Skip(f"needs {need} devices for pod mesh "
+                            f"{self.train.pod_mesh}, have "
+                            f"{len(jax.devices())}")
+            mesh_shape, names = self.train.pod_mesh, ("pod", "data",
+                                                      "model")
+            tag = "plain"
+        else:
+            mesh_shape, names = (1, 1), ("data", "model")
+            tag = "protected" if needs_sdc else "plain"
+        horizon = max(self.train.steps, max(sp.step for sp in specs) + 2)
+        golden = self._golden_train(mesh_shape, names, tag, steps=horizon)
+        any_dram = bool(kinds & {"dram_params", "dram_opt_state"})
+        f = 2 if any(sp.variant != "disk" for sp in specs
+                     if sp.kind == "pod_loss") else 1
+        policy = FTPolicy(diskless_every=1,
+                          disk_every=1 if needs_pod else 10 ** 6,
+                          f=f, scrub_every=1)
+        rt = self._train_runtime(mesh_shape, names, tag, policy=policy,
+                                 with_disk=needs_pod)
+        ev = self._fresh_events(specs)
+        false_alarms = 0
+        by_step: Dict[str, Dict[int, List[int]]] = {
+            "sdc": {}, "dram": {}, "pod": {}}
+        for j, sp in enumerate(specs):
+            if sp.kind == "sdc_collective":
+                by_step["sdc"].setdefault(sp.step, []).append(j)
+            elif sp.kind in ("dram_params", "dram_opt_state"):
+                by_step["dram"].setdefault(sp.step, []).append(j)
+            elif sp.kind == "pod_loss":
+                by_step["pod"].setdefault(sp.step, []).append(j)
+        try:
+            rt.injectors = tuple(
+                FailureInjector(dataclasses.replace(
+                    sp, shard=sp.shard % rt.p).failure_plan())
+                for sp in specs if sp.kind == "shard_loss")
+            drill_fns = {}
+            for step, js in by_step["sdc"].items():
+                evs = [(specs[j].shard % rt.p, specs[j].delta) for j in js]
+                opts = dataclasses.replace(
+                    rt.opts,
+                    sdc_inject=evs[0] if len(evs) == 1 else tuple(evs))
+                with jax.set_mesh(rt.gen.mesh):
+                    fn, in_sh, out_sh = build_train_step(
+                        rt.cfg, rt.gen.mesh, rt.shape, rt.adamw, opts)
+                    drill_fns[step] = jax.jit(
+                        fn, in_shardings=in_sh, out_shardings=out_sh,
+                        donate_argnums=(0,)).lower(
+                            rt.gen.state_shapes,
+                            make_inputs(rt.cfg, rt.shape)).compile()
+            state = rt.init_state(0)
+            pending_dram: List[int] = []
+            shrunk = False
+            regrow_at = None
+            i = 0
+            spins = 0
+            while i < horizon:
+                spins += 1
+                assert spins <= 8 * horizon, "episode loop did not converge"
+                if shrunk and regrow_at is not None and i >= regrow_at:
+                    state, _ = rt.regrow(state, at_step=i)
+                    shrunk = False
+                # encode BEFORE this step's faults: the snapshot any
+                # recovery restores is clean by construction
+                rt.checkpoint(i, state)
+                for j in by_step["dram"].get(i, []):
+                    if ev[j]["fired"]:
+                        continue
+                    sp = specs[j]
+                    group = ("params" if sp.kind == "dram_params"
+                             else "opt")
+                    state, leaf = _flip_state_leaf(state, group, sp)
+                    state = jax.device_put(state, rt.gen.in_shardings[0])
+                    ev[j]["fired"] = True
+                    ev[j]["note"] = (f"bit {sp.bit} in {group} leaf "
+                                     f"{leaf!r} at step {i}")
+                    pending_dram.append(j)
+                rolled_back = None
+                for j in by_step["pod"].get(i, []):
+                    if ev[j]["fired"]:
+                        continue
+                    rt.ckpt.wait()
+                    state, rollback, erep = rt.lose_pod(state)
+                    ev[j].update(
+                        fired=True, detected=True, corrected=True,
+                        rung=f"elastic:{erep.restore_path}",
+                        latency=erep.reshard_wall_s,
+                        note=f"shrink {erep.mesh_from}->{erep.mesh_to} at "
+                             f"step {i} via {erep.restore_path}, rollback "
+                             f"to {rollback}")
+                    shrunk = True
+                    regrow_at = min(i + 2, horizon - 1)
+                    rolled_back = rollback
+                    break   # one topology change per window; replay next
+                if rolled_back is None:
+                    t1 = time.perf_counter()
+                    state, rollback = rt.maybe_shard_failure(i, state)
+                    if rollback is not None:
+                        jax.block_until_ready(jax.tree.leaves(state)[0])
+                        lat = time.perf_counter() - t1
+                        for j, sp in enumerate(specs):
+                            if (sp.kind == "shard_loss" and sp.step == i
+                                    and not ev[j]["fired"]):
+                                ev[j].update(fired=True, detected=True,
+                                             corrected=True,
+                                             rung="diskless", latency=lat)
+                        rolled_back = rollback
+                if rolled_back is not None:
+                    # the recovery restored this step's pre-flip encode:
+                    # co-windowed flips were erased before any detector
+                    # saw them — absorbed by the episode, not missed
+                    for k in pending_dram:
+                        ev[k].update(
+                            absorbed=True,
+                            note=ev[k]["note"] + "; absorbed by the "
+                                                 "recovery rollback")
+                    pending_dram = []
+                    i = rolled_back
+                    continue
+                if any_dram:
+                    state, srep = rt.scrub(i, state)
+                    if srep is not None and srep.rolled_back:
+                        if pending_dram:
+                            for k in pending_dram:
+                                ev[k].update(detected=True, corrected=True,
+                                             rung="scrub:diskless",
+                                             latency=srep.wall_s)
+                            pending_dram = []
+                        else:
+                            false_alarms += 1
+                sdc_js = [j for j in by_step["sdc"].get(i, [])
+                          if not ev[j]["fired"]]
+                if sdc_js:
+                    batch = rt.place_batch(i)
+                    t1 = time.perf_counter()
+                    state, m = drill_fns[i](state, batch)
+                    jax.block_until_ready(m["loss"])
+                    lat = time.perf_counter() - t1
+                    det = not bool(m["abft_ok"])
+                    clean_mean = sum(golden["walls"]) / len(golden["walls"])
+                    for j in sdc_js:
+                        ev[j].update(
+                            fired=True, detected=det, corrected=det,
+                            rung="abft_inflight" if det else None,
+                            latency=max(lat - clean_mean, 0.0) if det
+                            else None,
+                            note=f"correction fused into reduction at "
+                                 f"step {i}")
+                else:
+                    state, m = rt.train_step(i, state)
+                    if "abft_ok" in m and not bool(m["abft_ok"]):
+                        false_alarms += 1
+                i += 1
+            if rt.ckpt is not None:
+                rt.ckpt.wait()
+            end_state, diff = _compare_trees(_host(state), golden["final"],
+                                             self.train.tol)
+        finally:
+            rt.close()
+        rows = [self._episode_event_row(
+            ep, sp, j, fired=e["fired"], detected=e["detected"],
+            corrected=e["corrected"], absorbed=e["absorbed"],
+            rung=e["rung"], latency=e["latency"], note=e["note"])
+            for j, (sp, e) in enumerate(zip(specs, ev))]
+        rows.append(self._episode_row(
+            ep, rows, end_state=end_state, diff=diff,
+            false_alarms=false_alarms,
+            note=f"{len(specs)} event(s) over {horizon} steps on "
+                 f"{'x'.join(map(str, mesh_shape))} [{tag}]"))
+        return rows
+
+    def _episode_serve(self, ep: Episode) -> List[FaultResult]:
+        """All events through ONE live decode: the SDC events ride a
+        multi-event SDCPlan into the protected logits reduction, the
+        DRAM events flip engine state between decode steps and must be
+        caught by the at-rest scrubber; outputs must stay bit-identical
+        to the scrubbed golden decode."""
+        specs = ep.resolved()
+        kinds = {sp.kind for sp in specs}
+        supported = {"sdc_collective", "dram_kv_cache", "dram_params"}
+        if kinds - supported:
+            raise _Skip(f"no serve episode adapter for kinds "
+                        f"{sorted(kinds - supported)}")
+        golden = self._golden_serve(scrub=1)
+        m_ext = self._serve_mesh()[1]
+        sdc_js = [j for j, sp in enumerate(specs)
+                  if sp.kind == "sdc_collective"]
+        plan = SDCPlan(tuple((specs[j].step, specs[j].shard % m_ext,
+                              specs[j].delta) for j in sdc_js)) \
+            if sdc_js else None
+        ev = self._fresh_events(specs)
+        flips: List[tuple] = []
+
+        def on_step(engine, step):
+            for j, sp in enumerate(specs):
+                if (sp.kind in ("dram_kv_cache", "dram_params")
+                        and sp.step == step and not ev[j]["fired"]):
+                    leaf, undo = _flip_engine_bit(engine, sp)
+                    ev[j]["fired"] = True
+                    ev[j]["note"] = (f"bit {sp.bit} in {leaf!r} at decode "
+                                     f"step {step}")
+                    flips.append((j, sp, undo))
+
+        eng, prompts = self._serve_engine(
+            sdc=SDCInjector(plan) if plan else None, scrub=1)
+        try:
+            outputs = self._drive(eng, prompts, on_step=on_step)
+        finally:
+            for _, sp, undo in flips:
+                if sp.kind == "dram_params":
+                    undo()      # shared engines: params must be restored
+        st = eng.stats
+        # SDC attribution: the injector fires plan events in step order,
+        # which is also the specs' (offset-sorted) order
+        for j, e in zip(sdc_js, st.events):
+            ev[j].update(fired=True, detected=st.detections > 0,
+                         corrected=bool(e.corrected),
+                         rung="abft_inflight" if st.detections else None,
+                         latency=st.recovery_latency_s(),
+                         note=f"located (r{e.row},c{e.col})")
+        # DRAM attribution: scrub events matched by domain in fire order
+        by_domain = {"kv": [e for e in st.scrub_events
+                            if e.domain == "kv"],
+                     "params": [e for e in st.scrub_events
+                                if e.domain != "kv"]}
+        for j, sp, _ in flips:
+            dom = "kv" if sp.kind == "dram_kv_cache" else "params"
+            if by_domain[dom]:
+                e = by_domain[dom].pop(0)
+                ev[j].update(
+                    detected=True, corrected=bool(e.repaired),
+                    rung=("scrub:kv_repair" if dom == "kv"
+                          else "scrub:restore"),
+                    latency=e.wall_s,
+                    note=ev[j]["note"] + f"; scrub {e.domain}:{e.leaf}")
+        false_alarms = sum(len(v) for v in by_domain.values())
+        for j, sp in enumerate(specs):
+            if not ev[j]["fired"] and not ev[j]["note"]:
+                ev[j]["note"] = (f"never fired: decode ran "
+                                 f"{st.decode_steps} step(s)")
+        end_state = ("bit_identical" if outputs == golden["outputs"]
+                     else "diverged")
+        rows = [self._episode_event_row(
+            ep, sp, j, fired=e["fired"], detected=e["detected"],
+            corrected=e["corrected"], absorbed=e["absorbed"],
+            rung=e["rung"], latency=e["latency"], note=e["note"])
+            for j, (sp, e) in enumerate(zip(specs, ev))]
+        rows.append(self._episode_row(
+            ep, rows, end_state=end_state,
+            diff=0.0 if end_state == "bit_identical" else None,
+            false_alarms=false_alarms,
+            note=f"{len(specs)} event(s) over {st.decode_steps} decode "
+                 f"steps; outputs "
+                 f"{'bit-identical' if end_state == 'bit_identical' else 'diverged'}"))
+        return rows
+
     # -- clean sweeps ---------------------------------------------------------
 
     def _clean_rows(self, workloads) -> List[FaultResult]:
@@ -947,7 +1647,9 @@ class CampaignRunner:
             self._golden_train((1, 1), ("data", "model"), "protected")
         if "serve" in workloads and not self._serve_golden:
             self._golden_serve()
-        for (shape, tag), g in sorted(self._train_golden.items()):
+        if "solver" in workloads and self._solver_golden is None:
+            self._golden_solver()
+        for (shape, tag, steps), g in sorted(self._train_golden.items()):
             detected = g["detections"] > 0
             outcome = classify(injected=False, detected=detected,
                                corrected=False, end_state="bit_identical",
@@ -958,7 +1660,7 @@ class CampaignRunner:
                              "ft.runtime/topology" if len(shape) == 3
                              else "ckpt.diskless/shards")
             note = (f"{g['detections']} detection(s) over "
-                    f"{self.train.steps} clean steps "
+                    f"{steps} clean steps "
                     f"({len(g['oks'])} protected reductions observed)")
             if tag == "scrub":
                 note = (f"{g['scrub_trips']} scrub trip(s) over "
@@ -966,8 +1668,13 @@ class CampaignRunner:
                         f"(mean verify "
                         f"{1e3 * sum(g['scrub_walls']) / max(len(g['scrub_walls']), 1):.1f} ms, "
                         "off the step critical path)")
+            name = f"train:clean_sweep:{'x'.join(map(str, shape))}:{tag}"
+            if steps != self.train.steps:
+                # episode horizons run their own goldens; keep the
+                # standard sweeps' names stable for gate lists
+                name += f":{steps}st"
             rows.append(FaultResult(
-                name=f"train:clean_sweep:{'x'.join(map(str, shape))}:{tag}",
+                name=name,
                 workload="train", kind="clean_sweep",
                 surface=sweep_surface,
                 protected=True, promise="none", outcome=outcome,
@@ -996,6 +1703,24 @@ class CampaignRunner:
                 end_state="bit_identical", max_abs_diff=0.0,
                 wall_s=g["stats"]["decode_s"] + g["stats"]["prefill_s"],
                 note=note))
+        if self._solver_golden is not None:
+            g = self._solver_golden
+            detected = g["trips"] > 0
+            rows.append(FaultResult(
+                name="solver:clean_sweep", workload="solver",
+                kind="clean_sweep",
+                surface="solvers.subspace_cg/correction_sum",
+                protected=True, promise="none",
+                outcome=classify(injected=False, detected=detected,
+                                 corrected=False,
+                                 end_state="bit_identical",
+                                 promise="none"),
+                detected=detected, corrected=False, rung=None,
+                recovery_latency_s=None, end_state="bit_identical",
+                max_abs_diff=0.0, wall_s=g["wall_s"],
+                note=f"{g['trips']} trip(s) over {g['iterations']} clean "
+                     f"CG iterations (monotonicity guard + per-subspace "
+                     f"local residual checks armed throughout)"))
         return rows
 
 

@@ -46,9 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "KINDS", "Surface", "register_surface", "get_surface", "surfaces",
-    "uncovered_surfaces", "ensure_registered",
-    "FaultSpec", "FaultSpace",
+    "KINDS", "WORKLOADS", "RATE_KINDS", "Surface", "register_surface",
+    "get_surface", "surfaces", "uncovered_surfaces", "ensure_registered",
+    "FaultSpec", "Episode", "FaultSpace",
     "FailurePlan", "FailureInjector", "SDCPlan", "SDCInjector",
     "flip_bit", "scatter_delta",
 ]
@@ -160,7 +160,7 @@ def ensure_registered() -> Dict[str, Surface]:
     for mod in ("repro.dist.collectives", "repro.kernels.ops",
                 "repro.kernels.flash_attention", "repro.ckpt.diskless",
                 "repro.ft.runtime", "repro.serve.engine",
-                "repro.models.layers"):
+                "repro.models.layers", "repro.solvers.subspace_cg"):
         importlib.import_module(mod)
     return dict(_REGISTRY)
 
@@ -194,12 +194,20 @@ KINDS = ("sdc_collective", "checksum_state_flip", "flash_state_flip",
          "dram_opt_state", "dram_kv_cache", "shard_loss", "pod_loss",
          "slow_pod")
 
-# kind -> which workloads can drill it and which surface it targets
+WORKLOADS = ("train", "serve", "solver")
+
+# kind -> which workloads can drill it and which surface it targets.  The
+# "solver" workload is the second protected algorithm family (PR 7): the
+# redundant-subspace-correction CG in `repro.solvers.subspace_cg`, where
+# the same fault kinds map onto solver-native surfaces — an SDC lands in
+# one replica's block correction, a DRAM flip hits the resident iterate,
+# and shard/pod loss kills subspace workers.
 _KIND_INFO = {
     "sdc_collective": dict(
-        workloads=("train", "serve"),
+        workloads=("train", "serve", "solver"),
         surface={"train": "dist.collectives/abft_psum",
-                 "serve": "serve.engine/logits_reduce"}),
+                 "serve": "serve.engine/logits_reduce",
+                 "solver": "solvers.subspace_cg/correction_sum"}),
     "checksum_state_flip": dict(
         workloads=("train",), surface="kernels.ops/acc_state"),
     "flash_state_flip": dict(
@@ -209,17 +217,38 @@ _KIND_INFO = {
     "gather_corruption": dict(
         workloads=("train",), surface="models.layers/embedding_gather"),
     "dram_params": dict(
-        workloads=("train", "serve"), surface="state.params_at_rest"),
+        workloads=("train", "serve", "solver"),
+        surface={"train": "state.params_at_rest",
+                 "serve": "state.params_at_rest",
+                 "solver": "solvers.subspace_cg/iterate_at_rest"}),
     "dram_opt_state": dict(
         workloads=("train",), surface="state.opt_state_at_rest"),
     "dram_kv_cache": dict(
         workloads=("serve",), surface="serve.engine/kv_cache_at_rest"),
     "shard_loss": dict(
-        workloads=("train",), surface="ckpt.diskless/shards"),
+        workloads=("train", "solver"),
+        surface={"train": "ckpt.diskless/shards",
+                 "solver": "solvers.subspace_cg/subspaces"}),
     "pod_loss": dict(
-        workloads=("train",), surface="ft.runtime/topology"),
+        workloads=("train", "solver"),
+        surface={"train": "ft.runtime/topology",
+                 "solver": "solvers.subspace_cg/subspaces"}),
     "slow_pod": dict(
         workloads=("train",), surface="ft.runtime/topology"),
+}
+
+# The kinds a Poisson-rate schedule may draw, per workload.  Constraint
+# (train): rate episodes thread ONE live runtime, and the pinned XLA can
+# only lower the protected step (defer_grad_reduce + abft_reduce — needed
+# for sdc_collective) single-device, while pod-topology kinds need the
+# 8-device pod mesh — so train rate schedules draw from the single-device
+# compatible set and topology kinds drill at rate in the solver family,
+# which simulates its pod fleet host-side (see ROADMAP "jax uprev").
+RATE_KINDS = {
+    "train": ("sdc_collective", "dram_params", "dram_opt_state",
+              "shard_loss"),
+    "serve": ("sdc_collective", "dram_params", "dram_kv_cache"),
+    "solver": ("sdc_collective", "dram_params", "shard_loss", "pod_loss"),
 }
 
 
@@ -242,8 +271,8 @@ class FaultSpec:
     reproducible.
     """
     kind: str
-    workload: str            # "train" | "serve"
-    step: int = 2            # step / engine decode step the fault fires at
+    workload: str            # "train" | "serve" | "solver"
+    step: int = 2            # step / decode step / CG iteration it fires at
     shard: int = 0           # DP or model-axis shard (sdc, shard_loss)
     pod: int = 0             # pod index (pod_loss, slow_pod)
     delta: float = 1e4       # additive corruption magnitude (sdc drills)
@@ -290,6 +319,18 @@ class FaultSpec:
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultSpec":
+        """Rebuild a spec from `asdict()` output — the replay path.
+
+        A campaign JSON records every event's spec; `launch/chaos.py
+        --replay CAMPAIGN_X.json` feeds them back through here, so a
+        recorded campaign re-runs exactly (same kinds, targets, seeds).
+        Unknown keys are ignored (artifacts may carry derived fields);
+        validation is the constructor's."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
     # -- adapters onto the existing drill paths ------------------------------
     def sdc_plan(self) -> "SDCPlan":
         """This spec as the one-event `SDCPlan` the existing SDC drill
@@ -305,18 +346,108 @@ class FaultSpec:
         return FailurePlan(((self.step, self.shard),))
 
 
+# Kinds whose target is a pod: `Episode.pod_affinity` re-aims these.
+_POD_KINDS = ("pod_loss", "slow_pod")
+
+
+@dataclasses.dataclass(frozen=True)
+class Episode:
+    """An ordered multi-fault scenario delivered into ONE live run.
+
+    Where a `FaultSpec` is one fault drilled in isolation, an `Episode`
+    is a correlated cluster: its ``events`` are ``(step_offset, spec)``
+    pairs anchored at ``at_step``, so two events with the same offset
+    land in the same step window (pod loss DURING an SDC step; a DRAM
+    burst hitting several leaves at once) and a later offset can land
+    while recovery from an earlier event is still in flight.
+
+    ``pod_affinity`` models *correlated* faults: when set, every
+    pod-targeting event in the episode is re-aimed at that one physical
+    pod (the same flaky rack hit repeatedly) regardless of what its spec
+    says.  ``rate_per_1k`` marks schedules drawn by `FaultSpace.poisson`
+    — the campaign's sustained-rate-at-parity summary reads it.
+
+    The campaign classifies the episode's *joint* end state against the
+    golden run (one episode-level outcome) while still recording a
+    per-event row with the rung that absorbed each fault.
+    """
+    name: str
+    workload: str                               # "train"|"serve"|"solver"
+    events: Tuple[Tuple[int, FaultSpec], ...]   # (step_offset, spec)
+    at_step: int = 2
+    pod_affinity: Optional[int] = None
+    rate_per_1k: Optional[float] = None
+    seed: int = 0
+    note: str = ""
+
+    def __post_init__(self):
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {self.workload!r}")
+        events = tuple(sorted(((int(o), s) for o, s in self.events),
+                              key=lambda e: e[0]))
+        if not events:
+            raise ValueError(f"episode {self.name!r} has no events")
+        for off, spec in events:
+            if off < 0:
+                raise ValueError(f"episode {self.name!r}: negative "
+                                 f"offset {off}")
+            if spec.workload != self.workload:
+                raise ValueError(
+                    f"episode {self.name!r} is a {self.workload!r} episode "
+                    f"but event {spec.name!r} targets {spec.workload!r}")
+        object.__setattr__(self, "events", events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def resolved(self) -> Tuple[FaultSpec, ...]:
+        """The concrete specs this episode delivers: offsets anchored at
+        ``at_step`` and pod-targeting events re-aimed by pod_affinity."""
+        out = []
+        for off, spec in self.events:
+            repl = {"step": self.at_step + off}
+            if self.pod_affinity is not None and spec.kind in _POD_KINDS:
+                repl["pod"] = self.pod_affinity
+            out.append(dataclasses.replace(spec, **repl))
+        return tuple(out)
+
+    def asdict(self) -> dict:
+        return {
+            "name": self.name, "workload": self.workload,
+            "at_step": self.at_step, "pod_affinity": self.pod_affinity,
+            "rate_per_1k": self.rate_per_1k, "seed": self.seed,
+            "note": self.note,
+            "events": [{"offset": off, "spec": spec.asdict()}
+                       for off, spec in self.events],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Episode":
+        """Rebuild from `asdict()` output (the `--replay` path)."""
+        events = tuple((int(e["offset"]), FaultSpec.from_dict(e["spec"]))
+                       for e in d["events"])
+        return cls(name=d["name"], workload=d["workload"], events=events,
+                   at_step=int(d.get("at_step", 2)),
+                   pod_affinity=d.get("pod_affinity"),
+                   rate_per_1k=d.get("rate_per_1k"),
+                   seed=int(d.get("seed", 0)), note=d.get("note", ""))
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpace:
-    """A named, ordered set of `FaultSpec`s to sweep.
+    """A named, ordered set of `FaultSpec`s (and multi-fault `Episode`s).
 
-    Build one with `default()` (the committed campaign: every kind, both
-    workloads, multi-pod faults included — needs 8 devices), `smoke()`
-    (the single-device subset benches and unit tests run), `cartesian()`
-    (explicit product over the knobs), or `sample()` (seeded subsample of
-    any space).
+    Build one with `default()` (the committed campaign: every kind, all
+    three workloads, multi-pod faults and the episode set included —
+    needs 8 devices), `smoke()` (the single-device subset benches and
+    unit tests run), `cartesian()` (explicit product over the knobs),
+    `episodes_smoke()`/`episodes_default()` (the multi-fault scenarios),
+    `poisson()`/`poisson_sweep()` (seeded rate schedules), or `sample()`
+    (seeded subsample of any space's one-fault specs).
     """
     name: str
     specs: Tuple[FaultSpec, ...]
+    episodes: Tuple[Episode, ...] = ()
 
     def __len__(self) -> int:
         return len(self.specs)
@@ -345,6 +476,15 @@ class FaultSpace:
                       shard=0, delta=1e4),
             FaultSpec(kind="dram_kv_cache", workload="serve", step=2,
                       bit=30),
+            # the solver family: all host-side, single-device drillable
+            FaultSpec(kind="sdc_collective", workload="solver", step=4,
+                      shard=3, delta=1e4),
+            FaultSpec(kind="dram_params", workload="solver", step=12,
+                      bit=30),
+            FaultSpec(kind="shard_loss", workload="solver", step=6,
+                      shard=4),
+            FaultSpec(kind="pod_loss", workload="solver", step=5, pod=1,
+                      variant="paired"),
         ))
 
     @classmethod
@@ -369,7 +509,160 @@ class FaultSpace:
                       variant="disk", seed=1),
             FaultSpec(kind="slow_pod", workload="train", step=1,
                       delay_s=0.05),
+            FaultSpec(kind="pod_loss", workload="solver", step=5, pod=2),
+        ), episodes=cls.episodes_default().episodes)
+
+    # -- multi-fault episode spaces ------------------------------------------
+
+    @classmethod
+    def episodes_smoke(cls) -> "FaultSpace":
+        """The single-device episode set CI's episode smoke runs: for each
+        of the three workloads, at least one *overlapping* episode (two
+        events in the same step window) plus one seeded Poisson rate
+        schedule."""
+        train_overlap = Episode(
+            "train:sdc+dram_burst", "train", at_step=2, events=(
+                (0, FaultSpec(kind="sdc_collective", workload="train",
+                              delta=1e4)),
+                (0, FaultSpec(kind="dram_params", workload="train",
+                              bit=30)),
+                (0, FaultSpec(kind="dram_params", workload="train",
+                              bit=30, seed=1)),
+                (1, FaultSpec(kind="dram_opt_state", workload="train",
+                              bit=29)),
+            ),
+            note="SDC mid-collective in the same window as a two-leaf "
+                 "DRAM burst, opt-state flip one step later")
+        serve_overlap = Episode(
+            "serve:sdc+kv_dram", "serve", at_step=1, events=(
+                (0, FaultSpec(kind="sdc_collective", workload="serve",
+                              delta=1e4)),
+                (0, FaultSpec(kind="dram_kv_cache", workload="serve",
+                              bit=30)),
+                (1, FaultSpec(kind="dram_params", workload="serve",
+                              bit=30)),
+            ),
+            note="decode-step SDC overlapping a KV-cache flip, params "
+                 "flip on the next decode step")
+        solver_overlap = Episode(
+            "solver:sdc_during_pod_loss", "solver", at_step=6, events=(
+                (0, FaultSpec(kind="pod_loss", workload="solver", pod=1,
+                              variant="paired")),
+                (0, FaultSpec(kind="sdc_collective", workload="solver",
+                              shard=2, delta=1e4)),
+            ),
+            note="the acceptance pair: a whole pod dies in the SAME "
+                 "iteration an SDC lands in a surviving replica's "
+                 "correction")
+        return cls("episodes-smoke", (), episodes=(
+            train_overlap, serve_overlap, solver_overlap,
+            cls.poisson(250.0, steps=8, workload="train", seed=7),
+            # serve draws fire at step at_step+offset, and the decode runs
+            # max_new_tokens (4) steps — so the draw horizon is 3, keeping
+            # every fire step inside the decode; solver schedules land
+            # inside the ~19 clean CG iterations
+            cls.poisson(250.0, steps=3, workload="serve", seed=11),
+            cls.poisson(150.0, steps=12, workload="solver", seed=5),
         ))
+
+    @classmethod
+    def episodes_default(cls) -> "FaultSpace":
+        """The committed episode campaign: the smoke set, the pod-mesh
+        train episodes (overlap during rung-3 recovery; correlated
+        repeat-pod), the solver correlated episode, and the Poisson rate
+        sweeps behind the sustained-rate-at-parity summary."""
+        pod_overlap = Episode(
+            "train:dram+podloss", "train", at_step=3, events=(
+                (0, FaultSpec(kind="dram_params", workload="train",
+                              bit=30)),
+                (0, FaultSpec(kind="pod_loss", workload="train",
+                              variant="diskless")),
+                (1, FaultSpec(kind="dram_params", workload="train",
+                              bit=30, seed=1)),
+            ),
+            note="DRAM flip in the same window as a pod loss (the "
+                 "rung-3 rollback absorbs it), second flip landing "
+                 "right after the reshard")
+        pod_repeat = Episode(
+            "train:pod_repeat", "train", at_step=3, pod_affinity=1,
+            events=(
+                (0, FaultSpec(kind="pod_loss", workload="train",
+                              variant="diskless")),
+                (2, FaultSpec(kind="pod_loss", workload="train",
+                              variant="diskless", seed=1)),
+            ),
+            note="correlated: the same physical pod dies again two "
+                 "steps after being re-grown")
+        solver_repeat = Episode(
+            "solver:pod_repeat", "solver", at_step=4, pod_affinity=0,
+            events=(
+                (0, FaultSpec(kind="pod_loss", workload="solver",
+                              variant="paired")),
+                (4, FaultSpec(kind="pod_loss", workload="solver",
+                              variant="paired", seed=1)),
+            ),
+            note="correlated: pod 0 dies, is revived, and dies again "
+                 "four iterations later")
+        smoke = cls.episodes_smoke().episodes
+        return cls("episodes-default", (), episodes=smoke + (
+            pod_overlap, pod_repeat, solver_repeat,
+        ) + cls.poisson_sweep((125.0, 250.0, 500.0), steps=8,
+                              workload="train", seed=3).episodes
+          + cls.poisson_sweep((125.0, 250.0), steps=3,
+                              workload="serve", seed=3).episodes
+          + cls.poisson_sweep((50.0, 150.0, 400.0), steps=12,
+                              workload="solver", seed=3).episodes)
+
+    @classmethod
+    def poisson(cls, events_per_1k_steps: float, *, steps: int = 8,
+                workload: str = "train", seed: int = 0,
+                name: str = "") -> "Episode":
+        """A seeded Poisson fault schedule: per step, the event count is
+        drawn from Poisson(rate/1000) and each event's kind uniformly
+        from `RATE_KINDS[workload]` — the question a rate campaign
+        answers is "what failure rate can this workload sustain at
+        parity?".  Deterministic in (rate, steps, workload, seed); if a
+        draw yields an empty schedule the seed advances to the first
+        non-empty one (a schedule that delivers nothing is vacuous, and
+        silently reporting it `corrected` would inflate the sustained
+        rate)."""
+        if workload not in RATE_KINDS:
+            raise ValueError(f"no rate kinds for workload {workload!r}")
+        kinds = RATE_KINDS[workload]
+        for attempt in range(seed, seed + 64):
+            rng = np.random.RandomState(attempt)
+            events = []
+            for t in range(steps):
+                for _ in range(int(rng.poisson(events_per_1k_steps / 1e3))):
+                    kind = kinds[int(rng.randint(0, len(kinds)))]
+                    fields = dict(kind=kind, workload=workload,
+                                  seed=len(events))
+                    if kind == "pod_loss":
+                        fields["pod"] = int(rng.randint(0, 3))
+                        if workload == "solver":
+                            fields["variant"] = "paired"
+                    elif kind == "shard_loss":
+                        fields["shard"] = int(rng.randint(0, 12)) \
+                            if workload == "solver" else 0
+                    events.append((t, FaultSpec(**fields)))
+            if events:
+                return Episode(
+                    name or f"{workload}:poisson{events_per_1k_steps:g}",
+                    workload, tuple(events), at_step=1,
+                    rate_per_1k=events_per_1k_steps, seed=attempt,
+                    note=f"Poisson schedule, {events_per_1k_steps:g} "
+                         f"events/1k steps over {steps} steps")
+        raise ValueError(  # pragma: no cover - 64 empty draws won't happen
+            f"no non-empty Poisson draw at rate {events_per_1k_steps}")
+
+    @classmethod
+    def poisson_sweep(cls, rates: Sequence[float], *, steps: int = 8,
+                      workload: str = "train", seed: int = 0) -> "FaultSpace":
+        """One Poisson episode per rate — the rate sweep whose highest
+        all-events-corrected rate is the sustained-rate-at-parity row."""
+        eps = tuple(cls.poisson(r, steps=steps, workload=workload,
+                                seed=seed + i) for i, r in enumerate(rates))
+        return cls(f"poisson-{workload}", (), episodes=eps)
 
     @classmethod
     def cartesian(cls, *, name: str = "cartesian",
@@ -391,13 +684,15 @@ class FaultSpace:
         return cls(name, tuple(specs))
 
     def sample(self, n: int, seed: int = 0) -> "FaultSpace":
-        """A seeded without-replacement subsample (order-preserving)."""
+        """A seeded without-replacement subsample of the one-fault specs
+        (order-preserving; episodes ride along unsampled)."""
         if n >= len(self.specs):
             return self
         rng = np.random.RandomState(seed)
         idx = sorted(rng.choice(len(self.specs), size=n, replace=False))
         return FaultSpace(f"{self.name}-sample{n}-seed{seed}",
-                          tuple(self.specs[i] for i in idx))
+                          tuple(self.specs[i] for i in idx),
+                          episodes=self.episodes)
 
 
 # ---------------------------------------------------------------------------
@@ -439,16 +734,36 @@ def scatter_delta(extent: int, shard, delta) -> jax.Array:
 @dataclasses.dataclass(frozen=True)
 class FailurePlan:
     """Deterministic plan: at step s, lose DP shard i (the paper's fixed
-    EXIT-point mode, 'the most practical and reproducible approach')."""
+    EXIT-point mode, 'the most practical and reproducible approach').
+
+    Exact-duplicate events are deduped at construction: the injector's
+    one-fire-per-event delivery would otherwise silently merge them, and
+    a plan that *says* two faults but *delivers* one corrupts every
+    count the campaign reports."""
     events: Tuple[Tuple[int, int], ...]   # (step, shard_index)
+
+    def __post_init__(self):
+        seen, out = set(), []
+        for e in self.events:
+            if e not in seen:
+                seen.add(e)
+                out.append(e)
+        object.__setattr__(self, "events", tuple(out))
 
     @classmethod
     def random(cls, n_events: int, max_step: int, p: int, seed: int = 0):
-        """The stress-test mode: random in time and location (§4.3)."""
+        """The stress-test mode: random in time and location (§4.3).
+        Steps are drawn WITHOUT replacement (at most one loss per step):
+        with per-event independent draws, two losses landing on one step
+        would exceed the f=1 erasure budget of the default diskless code
+        and — worse — silently merge in one-event-per-check delivery.
+        `n_events` is clamped to the number of drillable steps."""
         rng = np.random.RandomState(seed)
+        n_events = min(n_events, max_step - 1)
+        steps = rng.choice(np.arange(1, max_step), size=n_events,
+                           replace=False)
         ev = tuple(sorted(
-            (int(rng.randint(1, max_step)), int(rng.randint(0, p)))
-            for _ in range(n_events)))
+            (int(s), int(rng.randint(0, p))) for s in steps))
         return cls(ev)
 
 
@@ -500,8 +815,18 @@ class SDCPlan:
 
     A step may carry SEVERAL events — two bit flips landing in two different
     reductions of the same compiled step (the multi-collective fault model).
-    `events_at(step)` groups them; `SDCInjector.check_all` delivers them."""
+    `events_at(step)` groups them; `SDCInjector.check_all` delivers them.
+    Exact-duplicate events are deduped at construction (the injector's
+    fired-set delivery would silently merge them — see `FailurePlan`)."""
     events: Tuple[Tuple[int, int, float], ...]   # (step, dp_shard, delta)
+
+    def __post_init__(self):
+        seen, out = set(), []
+        for e in self.events:
+            if e not in seen:
+                seen.add(e)
+                out.append(e)
+        object.__setattr__(self, "events", tuple(out))
 
     def events_at(self, step: int) -> Tuple[Tuple[int, float], ...]:
         """All (shard, delta) payloads planned for `step`, in plan order."""

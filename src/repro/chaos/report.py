@@ -16,13 +16,17 @@ from typing import Dict, List
 
 from repro.chaos.faults import ensure_registered, uncovered_surfaces
 
-__all__ = ["coverage_matrix", "summarize", "ledger", "campaign_dict",
-           "render_markdown"]
+__all__ = ["coverage_matrix", "summarize", "episodes", "ledger",
+           "campaign_dict", "render_markdown"]
 
-SCHEMA = "repro.chaos.campaign/v1"
+SCHEMA = "repro.chaos.campaign/v2"
 
-OUTCOMES = ("corrected", "detected", "missed", "false_alarm", "clean",
-            "skipped")
+# "absorbed": an episode event whose corruption was erased by a
+# co-occurring recovery's rollback before any detector needed to see it
+# (e.g. a DRAM flip landing in the same step window as a pod loss) —
+# attributed to the episode, deliberately NOT a "missed"
+OUTCOMES = ("corrected", "absorbed", "detected", "missed", "false_alarm",
+            "clean", "skipped")
 
 
 def _latency_stats(lats: List[float]) -> Dict[str, float]:
@@ -83,6 +87,55 @@ def summarize(results) -> dict:
     }
 
 
+def episodes(results) -> dict:
+    """Episode-level aggregation + the sustained-rate-at-parity summary.
+
+    Rate episodes (their spec carries ``rate_per_1k``) answer the §4.3
+    stress question "what fault rate can this workload sustain at
+    parity?": per workload, the sustained rate is the highest tested
+    events-per-1k-steps rate whose whole schedule came out ``corrected``
+    (every event recovered AND the end state at parity with the clean
+    golden run); any lower rate that failed is listed alongside, so a
+    non-monotonic draw can't hide."""
+    rows = [r for r in results if r.kind == "episode"]
+    ep_rows = []
+    rates: Dict[str, List[tuple]] = {}
+    for r in rows:
+        spec = r.spec or {}
+        rate = spec.get("rate_per_1k")
+        ep_rows.append({
+            "name": r.name, "episode": r.episode, "workload": r.workload,
+            "outcome": r.outcome, "end_state": r.end_state, "rung": r.rung,
+            "rate_per_1k": rate,
+            "n_events": len(spec.get("events") or []),
+            "recovery_latency_s": r.recovery_latency_s,
+            "wall_s": r.wall_s,
+        })
+        if rate is not None:
+            rates.setdefault(r.workload, []).append((rate, r.outcome))
+    sustained = {}
+    for wl, pairs in sorted(rates.items()):
+        ok = [rate for rate, o in pairs if o == "corrected"]
+        failed = [rate for rate, o in pairs
+                  if o not in ("corrected", "skipped")]
+        sustained[wl] = {
+            "sustained_rate_per_1k": max(ok) if ok else 0.0,
+            "rates_tested": sorted(rate for rate, _ in pairs),
+            "rates_failed": sorted(failed),
+        }
+    return {
+        "n_episodes": len(rows),
+        "by_outcome": {o: sum(1 for r in rows if r.outcome == o)
+                       for o in OUTCOMES
+                       if any(r.outcome == o for r in rows)},
+        "not_corrected": [r.name for r in rows
+                          if r.outcome not in ("corrected", "skipped")],
+        "skipped": [r.name for r in rows if r.outcome == "skipped"],
+        "episodes": ep_rows,
+        "sustained_rate_at_parity": sustained,
+    }
+
+
 def ledger(results) -> List[dict]:
     """The uncovered-surface ledger, annotated with what the campaign
     actually observed on each (drilled + the resulting outcome, or an
@@ -111,13 +164,14 @@ def ledger(results) -> List[dict]:
 
 
 def campaign_dict(res) -> dict:
-    """The full machine-readable artifact (CAMPAIGN_PR6.json)."""
+    """The full machine-readable artifact (CAMPAIGN_PR7.json)."""
     return {
         "schema": SCHEMA,
         "space": res.space,
         "meta": res.meta,
         "summary": summarize(res.results),
         "matrix": coverage_matrix(res.results),
+        "episodes": episodes(res.results),
         "uncovered_surfaces": ledger(res.results),
         "events": [r.asdict() for r in res.results],
     }
@@ -144,8 +198,9 @@ def render_markdown(res) -> str:
                     if v),
         "",
         "| fault kind | surface | protected | workloads | corrected | "
-        "detected | missed | false alarm | rung(s) | recovery latency |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "absorbed | detected | missed | false alarm | rung(s) | "
+        "recovery latency |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for kind in sorted(matrix):
         for surface in sorted(matrix[kind]):
@@ -155,8 +210,33 @@ def render_markdown(res) -> str:
                 f"| {kind} | {surface} | "
                 f"{'yes' if c['protected'] else 'NO'} | "
                 f"{'+'.join(c['workloads'])} | {o['corrected']} | "
+                f"{o['absorbed']} | "
                 f"{o['detected']} | {o['missed']} | {o['false_alarm']} | "
                 f"{', '.join(c['rungs']) or '—'} | {_fmt_lat(c)} |")
+    eps = episodes(res.results)
+    if eps["n_episodes"]:
+        lines += [
+            "", "## Episodes", "",
+            "| episode | workload | events | rate/1k | outcome | "
+            "end state | rung(s) |",
+            "|---|---|---|---|---|---|---|",
+        ]
+        for e in eps["episodes"]:
+            rate = "—" if e["rate_per_1k"] is None else f"{e['rate_per_1k']:g}"
+            lines.append(
+                f"| {e['episode']} | {e['workload']} | {e['n_events']} | "
+                f"{rate} | {e['outcome']} | {e['end_state']} | "
+                f"{e['rung'] or '—'} |")
+        sus = eps["sustained_rate_at_parity"]
+        if sus:
+            lines += ["", "**Sustained rate at parity** "
+                          "(events per 1k steps, all recovered, end state "
+                          "at parity): "
+                      + "; ".join(
+                          f"{wl} = {st['sustained_rate_per_1k']:g}"
+                          + (f" (failed at {st['rates_failed']})"
+                             if st["rates_failed"] else "")
+                          for wl, st in sus.items())]
     lines += ["", "## Uncovered-surface ledger", ""]
     rows = ledger(res.results)
     for row in rows:

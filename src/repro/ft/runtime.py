@@ -42,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,12 +151,40 @@ class FTRuntime:
                  sdc_injector: Optional[SDCInjector] = None):
         self.p = p
         self.policy = policy
-        self.injector = injector
+        # `injector` accepts one FailureInjector or a SEQUENCE of them —
+        # multi-fault episodes thread several concurrent erasure sources
+        # through one runtime; every injector is drained each step and
+        # same-step failures recover JOINTLY (one solve over all lost
+        # shards, bounded by the checksum capacity f).
+        if injector is None:
+            self.injectors: Tuple[FailureInjector, ...] = ()
+        elif isinstance(injector, FailureInjector):
+            self.injectors = (injector,)
+        else:
+            self.injectors = tuple(injector)
         self.sdc_injector = sdc_injector
         self.ckpt = ckpt_manager
         self.diskless = DisklessCheckpoint(p, policy.f)
         self.recoveries = {"diskless": 0, "disk": 0, "sdc": 0}
         self.step_times = []
+
+    @property
+    def injector(self) -> Optional[FailureInjector]:
+        """Back-compat single-injector view (first of `injectors`)."""
+        return self.injectors[0] if self.injectors else None
+
+    def _failed_shards(self, step: int) -> List[int]:
+        """Drain EVERY injector's events for `step` (an injector may plan
+        several same-step losses): the deduped joint failure set."""
+        failed: List[int] = []
+        for inj in self.injectors:
+            while True:
+                shard = inj.check(step)
+                if shard is None:
+                    break
+                if shard not in failed:
+                    failed.append(shard)
+        return failed
 
     def maybe_checkpoint(self, step: int, state, aux=None):
         if step % self.policy.diskless_every == 0:
@@ -181,10 +209,11 @@ class FTRuntime:
         a drill pre-builds one step per planned event set).
         """
         t0 = time.time()
-        failed = self.injector.check(step_idx) if self.injector else None
-        if failed is not None:
-            state = FailureInjector.damage(state, failed, self.p)
-            state = self.recover(state, [failed])
+        failed = self._failed_shards(step_idx)
+        if failed:
+            for shard in failed:
+                state = FailureInjector.damage(state, shard, self.p)
+            state = self.recover(state, failed)
         # only consume SDC events when there is a handler to drive them —
         # otherwise the events stay planned instead of silently vanishing
         sdc = (self.sdc_injector.check_all(step_idx)
@@ -525,20 +554,24 @@ class ElasticRuntime(FTRuntime):
     # -- rung 2: same-topology shard loss ------------------------------------
 
     def maybe_shard_failure(self, step: int, state):
-        """Drive the `FailureInjector` through rung 2.  Returns
+        """Drive the `FailureInjector`(s) through rung 2.  Returns
         ``(state, rollback_step or None)``; on a hit the state is the
         recovered ENCODE-point state and the caller replays from
         `rollback_step` (the deterministic pipeline makes replay exact).
-        Diskless-first; disk fallback restores the GLOBAL state this
-        runtime's `checkpoint` saves (not the stacked view)."""
-        failed = self.injector.check(step) if self.injector else None
-        if failed is None:
+        EVERY injector is drained for this step and concurrent losses
+        recover JOINTLY — one checksum solve over the whole failure set
+        while it fits the capacity `f`.  Diskless-first; disk fallback
+        restores the GLOBAL state this runtime's `checkpoint` saves (not
+        the stacked view)."""
+        failed = self._failed_shards(step)
+        if not failed:
             return state, None
-        if self.diskless.step is not None and 1 <= self.policy.f:
-            stacked = FailureInjector.damage(stack_view(state, self.p),
-                                             failed, self.p)
+        if self.diskless.step is not None and len(failed) <= self.policy.f:
+            stacked = stack_view(state, self.p)
+            for shard in failed:
+                stacked = FailureInjector.damage(stacked, shard, self.p)
             self.recoveries["diskless"] += 1
-            stacked = self.diskless.recover(stacked, [failed])
+            stacked = self.diskless.recover(stacked, failed)
             state = unstack_view(stacked, state)
             rollback = self.diskless.step
         elif self.ckpt is not None and self.ckpt.latest_step() is not None:

@@ -136,10 +136,14 @@ def test_fault_space_default_spans_the_matrix():
     kinds = {s.kind for s in space}
     assert len(kinds) >= 6                       # acceptance: >= 6 classes
     workloads = {s.workload for s in space}
-    assert workloads == {"train", "serve"}
+    assert workloads == {"train", "serve", "solver"}
     # both pod-loss rungs drilled
-    assert {s.variant for s in space if s.kind == "pod_loss"} \
-        == {"diskless", "disk"}
+    assert {s.variant for s in space if s.kind == "pod_loss"
+            and s.workload == "train"} == {"diskless", "disk"}
+    # the default space carries the committed episode campaign
+    assert space.episodes
+    assert {ep.workload for ep in space.episodes} \
+        == {"train", "serve", "solver"}
 
 
 def test_fault_space_cartesian_and_seeded_sample():

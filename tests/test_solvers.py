@@ -1,0 +1,213 @@
+"""Unit tests for the redundant-subspace-correction CG solver — the
+second protected algorithm family (arXiv 1309.0212).
+
+The fault-tolerance contract under test is **continue-through, not
+rollback**: every recovery (replica failover, partition-of-unity
+re-weighting, replica repair, guard restart) keeps the live iterate and
+converges through the degradation.  No checkpoint is ever taken, so the
+only acceptable end states are bit-identity with the clean solve (when
+the repair path is exact) or convergence to the same rtol (when the
+preconditioner itself changed).
+"""
+import numpy as np
+import pytest
+
+from repro.chaos.faults import get_surface
+from repro.solvers import RedundantSubspaceCG, SolverConfig, poisson_1d
+
+
+def _clean(cfg=SolverConfig()):
+    s = RedundantSubspaceCG(cfg)
+    s.run()
+    return s
+
+
+def test_clean_solve_converges_with_zero_trips():
+    s = _clean()
+    rep = s.report()
+    assert rep.converged
+    assert rep.residual_norm <= rep.rtol * s.bnorm
+    assert rep.trips == () and rep.failovers == () and rep.reweights == ()
+    assert rep.dead_subspaces == ()
+    # and it actually solved the system
+    a, b = poisson_1d(SolverConfig().n, seed=SolverConfig().seed)
+    assert float(np.max(np.abs(a @ s.x - b))) < 1e-8
+
+
+def test_wraparound_cover_is_exactly_double():
+    s = RedundantSubspaceCG()
+    assert np.all(s.coverage() == 2.0), (
+        "every unknown must be covered by exactly two subspaces, or a "
+        "single subspace death could leave a cover void")
+
+
+def test_anti_placement_pod_loss_is_pure_failover():
+    """With anti-affine replicas a pod death never kills both copies of
+    any subspace: every kill is a failover and the solve is BIT-IDENTICAL
+    to the clean one (the surviving replica computes the same
+    correction)."""
+    golden = _clean()
+    s = RedundantSubspaceCG(SolverConfig(placement="anti"))
+    for _ in range(3):
+        s.iterate()
+    out = s.lose_pod(1)
+    assert out["dead_subspaces"] == []
+    assert all(r == "solver:failover" for r in out["rungs"]) and out["rungs"]
+    rep = s.run()
+    assert rep.converged and rep.reweights == ()
+    assert s.error_vs(golden) == 0.0
+    assert rep.iterations == golden.report().iterations
+
+
+def test_paired_placement_pod_loss_reweights_and_converges_through():
+    """Paired placement puts both replicas of a subspace on one pod, so a
+    pod death kills whole subspaces: the partition of unity is
+    renormalized over the survivors and CG converges through on the
+    degraded preconditioner — no rollback, same rtol."""
+    golden = _clean()
+    s = RedundantSubspaceCG(SolverConfig(placement="paired"))
+    for _ in range(3):
+        s.iterate()
+    out = s.lose_pod(1)
+    assert out["dead_subspaces"], "paired pod loss must kill subspaces"
+    assert "solver:reweight" in out["rungs"]
+    rep = s.run()
+    assert rep.converged
+    assert rep.dead_subspaces == tuple(out["dead_subspaces"])
+    # converged to the same solution (within the residual tolerance),
+    # typically in MORE iterations than the clean solve
+    assert s.error_vs(golden) < 1e-6
+    assert rep.iterations >= golden.report().iterations
+
+
+def test_sdc_repaired_from_sister_replica_bit_identical():
+    golden = _clean()
+    s = RedundantSubspaceCG()
+    for _ in range(4):
+        s.iterate()
+    s.inject_correction_sdc(subspace=3, replica=0, index=2, delta=1e4)
+    rep = s.run()
+    kinds = [t.kind for t in rep.trips]
+    assert kinds == ["replica_repair"]
+    assert "subspace 3" in rep.trips[0].detail
+    assert rep.converged
+    # the sister replica's correction is the exact same clean block solve
+    assert s.error_vs(golden) == 0.0
+
+
+def test_sdc_on_lone_survivor_recomputed_locally():
+    s = RedundantSubspaceCG()
+    for _ in range(2):
+        s.iterate()
+    s.lose_worker(3, 1)                       # sister gone: lone survivor
+    s.inject_correction_sdc(subspace=3, replica=0, index=1, delta=1e4)
+    rep = s.run()
+    assert "local_recompute" in [t.kind for t in rep.trips]
+    assert rep.failovers == ("s3r1",)
+    assert rep.converged
+
+
+def test_iterate_dram_flip_trips_guard_and_converges_through():
+    """A catastrophic bit flip in the resident iterate must trip the
+    explicit-residual monotonicity guard (the candidate is discarded, the
+    iterate sanitized, the direction restarted) and the solve must still
+    converge — forward repair, no rollback."""
+    golden = _clean()
+    s = RedundantSubspaceCG()
+    for _ in range(6):
+        s.iterate()
+    # the campaign's detectability rule: flip the top exponent bit when
+    # the value is small (-> huge), the next one down otherwise
+    idx = int(np.argmax(np.abs(s.x)))
+    s.corrupt_iterate(idx, bit=62 if abs(s.x[idx]) < 2.0 else 61)
+    rep = s.run()
+    assert "guard_restart" in [t.kind for t in rep.trips]
+    assert rep.converged
+    assert s.error_vs(golden) < 1e-6
+
+
+def test_mid_iteration_subspace_death_completes_the_iteration():
+    """Both replicas of one subspace die INSIDE an iteration (after the
+    local solves, before the weighted sum): the survivors are re-weighted
+    on the fly, the iteration completes, and the solve converges."""
+    s = RedundantSubspaceCG()
+    for _ in range(3):
+        s.iterate()
+    s.lose_worker(5, 0, mid_iteration=True)
+    s.lose_worker(5, 1, mid_iteration=True)
+    s.iterate()                               # must not raise
+    assert s.dead_subspaces() == [5]
+    rep = s.run()
+    assert rep.converged
+    assert "solver:reweight" in rep.rungs
+
+
+def test_corruption_landing_in_a_topology_restart_window_is_logged():
+    """A flip that lands while p is None (a subspace death just forced a
+    direction restart) is caught by the restart's sanitizer pass — and
+    must be LOGGED as a guard_restart trip, not silently zeroed, or the
+    campaign would classify the episode event as missed."""
+    s = RedundantSubspaceCG(SolverConfig(placement="paired"))
+    for _ in range(3):
+        s.iterate()
+    s.lose_pod(1)                             # kills subspaces -> p = None
+    assert s.p is None
+    s.x[4] = np.inf                           # corruption in the window
+    s.iterate()
+    trips = [t for t in s.trips if t.kind == "guard_restart"]
+    assert trips and "sanitized 1 corrupt" in trips[0].detail
+    assert s.run().converged
+
+
+def test_clean_topology_restart_logs_nothing():
+    """The flip side: a restart on a CLEAN iterate (pure topology change)
+    must not log a trip — that would be a false alarm in clean sweeps."""
+    s = RedundantSubspaceCG(SolverConfig(placement="paired"))
+    for _ in range(3):
+        s.iterate()
+    s.lose_pod(1)
+    trips_before = len(s.trips)
+    s.iterate()                               # restart path, clean iterate
+    assert len(s.trips) == trips_before
+
+
+def test_revive_pod_restores_cover_and_weights():
+    s = RedundantSubspaceCG(SolverConfig(placement="paired"))
+    for _ in range(2):
+        s.iterate()
+    s.lose_pod(0)
+    assert s.dead_subspaces()
+    revived = s.revive_pod(0)
+    assert revived and s.dead_subspaces() == []
+    assert np.all(s.coverage() == 2.0)
+    assert s.run().converged
+
+
+def test_cover_void_is_unrecoverable_and_says_so():
+    """Killing both subspaces covering an unknown must raise — an
+    uncovered unknown cannot be preconditioned and pretending otherwise
+    would silently stall the solve."""
+    s = RedundantSubspaceCG()
+    for rep in range(2):
+        s.lose_worker(0, rep)
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        for rep in range(2):
+            s.lose_worker(1, rep)             # adjacent: shares cover
+
+
+def test_solver_surfaces_registered_protected_tolerance():
+    for name, kinds in (
+            ("solvers.subspace_cg/correction_sum", ("sdc_collective",)),
+            ("solvers.subspace_cg/iterate_at_rest", ("dram_params",)),
+            ("solvers.subspace_cg/subspaces", ("shard_loss", "pod_loss"))):
+        surf = get_surface(name)
+        assert surf.protected and surf.promise == "tolerance"
+        assert surf.kinds == kinds
+        assert surf.detector
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="divide"):
+        SolverConfig(n=97)
+    with pytest.raises(ValueError, match="placement"):
+        SolverConfig(placement="chaotic")
