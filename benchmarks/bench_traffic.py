@@ -1,0 +1,205 @@
+"""Heavy-traffic serving bench: paged KV + SLO scheduler under load.
+
+The serving restatement of the paper's thesis (FT overhead < 12% of the
+fastest failure-free run, shrinking under load): a closed-loop backlog and
+an open-loop Poisson trace are replayed through `PagedServeEngine`, then
+the SAME open-loop trace is replayed under a fault campaign — mid-decode
+SDCs on the logits reduction (detected + corrected by the `abft_psum`
+residual) and page-granular DRAM corruption in the paged KV pools
+(detected + erasure-repaired by the per-page checksums) — and the p99
+TTFT degradation is reported as a first-class number next to the
+zero-missed gate.
+
+`run()` emits the smoke rows for `benchmarks/run.py`; `main()` writes the
+full machine-readable report (``--json BENCH_PR8.json``) that CI's
+traffic-smoke job gates on: zero missed faults, token streams identical
+to the clean replay, p99-under-fault within `P99_DEGRADATION_BUDGET_PCT`.
+"""
+import argparse
+import json
+import time
+
+# CI gate: drilled p99 TTFT may not exceed clean p99 by more than this.
+# Measured locally: ~15-40% (scrub repair + correction retries on a handful
+# of steps); the budget is deliberately loose against noisy shared runners.
+P99_DEGRADATION_BUDGET_PCT = 300.0
+
+
+def _scheduler_stress(n: int = 4000) -> dict:
+    """Host-only: thousands of queued requests through the SLO scheduler
+    (no model in the loop) — admission control, aging, pop throughput."""
+    from repro.serve.scheduler import SchedPolicy, SLOScheduler
+
+    t = [0.0]
+    sched = SLOScheduler(SchedPolicy(max_queue=n // 2, n_priorities=3,
+                                     age_boost_s=0.5),
+                         clock=lambda: t[0])
+    for i in range(n):
+        sched.submit(i, priority=i % 3)
+        t[0] += 1e-4
+    queued = len(sched)
+    t0 = time.perf_counter()
+    order = []
+    while len(sched):
+        order.append(sched.pop())
+        t[0] += 1e-3
+    dt = time.perf_counter() - t0
+    bound = sched.queue_age_bound_s(2) + queued * 1e-3  # aging + drain time
+    return {
+        "submitted": sched.stats.submitted,
+        "rejected": sched.stats.rejected,
+        "popped": sched.stats.popped,
+        "pops_per_s": sched.stats.popped / dt if dt > 0 else 0.0,
+        "max_wait_s": sched.stats.max_wait_s,
+        "wait_bound_s": bound,
+        "wait_bound_held": sched.stats.max_wait_s <= bound,
+    }
+
+
+def bench(n_closed: int = 16, n_open: int = 24) -> dict:
+    import jax
+    import numpy as np
+    from repro.configs.base import smoke_config
+    from repro.ft.failures import SDCInjector, SDCPlan
+    from repro.models import transformer as tf
+    from repro.serve.engine import PagedServeEngine
+    from repro.serve.scheduler import SchedPolicy, SLOScheduler
+    from repro.serve.traffic import (TrafficConfig, compare, make_trace,
+                                     run_trace)
+
+    cfg = smoke_config("qwen2-0.5b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    page_size = 8
+
+    def build(sdc=None):
+        e = PagedServeEngine(
+            cfg, params, slots=4, max_len=64, page_size=page_size,
+            chunk_prefill=2 * page_size, prefix_cache=True,
+            scrub_every=1, abft_reduce="correct", sdc=sdc,
+            scheduler=SLOScheduler(SchedPolicy(max_queue=4 * n_open)))
+        e.warm(prompt_len=8, decode_steps=2)
+        e.reset()
+        return e
+
+    # the shared 16-token system prompt spans two full pages -> prefix hits
+    closed_cfg = TrafficConfig(n_requests=n_closed, vocab=cfg.vocab_size,
+                               arrival="closed", prompt_max=24, out_max=8,
+                               shared_prefix_len=2 * page_size, seed=8)
+    open_cfg = TrafficConfig(n_requests=n_open, vocab=cfg.vocab_size,
+                             arrival="open", rate_per_step=0.6,
+                             prompt_max=24, out_max=8,
+                             shared_prefix_len=2 * page_size, seed=9)
+    closed_trace = make_trace(closed_cfg)
+    open_trace = make_trace(open_cfg)
+
+    rep_closed = run_trace(build(), closed_trace)
+    seen = []  # decode steps that actually execute (idle gaps are skipped)
+    rep_open = run_trace(build(), open_trace,
+                         on_step=lambda e, s: seen.append(s))
+
+    # --- the SAME open-loop trace, drilled -------------------------------
+    # two mid-decode SDCs on the logits reduction + two page-granular DRAM
+    # hits in the paged KV pools.  The schedule is derived from the clean
+    # replay's executed steps (the fault replay is step-identical — every
+    # fault is corrected), so open-loop idle fast-forwarding can never
+    # skip past an injection point.
+    assert len(seen) > 8, "trace too short to schedule the drill"
+    sdc_steps = (seen[len(seen) // 3], seen[len(seen) // 2])
+    dram_steps = {seen[2 * len(seen) // 3], seen[(5 * len(seen)) // 6]}
+    injected = {"count": 0}
+
+    def dram_hook(eng, step):
+        if step in dram_steps and injected["count"] < len(dram_steps):
+            live = eng.kv.live_pages()
+            if not live:
+                return
+            key = next(iter(eng.kv.pools))
+            eng.kv.corrupt_page(key, live[injected["count"] % len(live)])
+            injected["count"] += 1
+
+    sdc = SDCInjector(SDCPlan(tuple((s, 0, 1e4) for s in sdc_steps)))
+    eng_fault = build(sdc=sdc)
+    rep_fault = run_trace(eng_fault, open_trace, on_step=dram_hook)
+    slo = compare(rep_open, rep_fault,
+                  expected_faults=len(sdc_steps) + injected["count"])
+
+    assert injected["count"] == len(dram_steps), "dram faults did not fire"
+    assert rep_fault.sdc_events == len(sdc_steps), "sdc drill did not fire"
+    assert slo["faults_missed"] == 0, f"missed faults: {slo}"
+    assert slo["token_streams_identical"], \
+        "drilled token streams diverged from the clean replay"
+    eng_fault.kv.check_invariants()
+
+    return {
+        "schema": "repro.bench_traffic/v1",
+        "config": {"closed": vars(closed_cfg).copy(),
+                   "open": vars(open_cfg).copy(),
+                   "page_size": page_size, "slots": 4, "max_len": 64,
+                   "chunk_prefill": 2 * page_size, "scrub_every": 1,
+                   "sdc_steps": list(sdc_steps),
+                   "dram_steps": sorted(dram_steps)},
+        "closed_clean": rep_closed.asdict(),
+        "open_clean": rep_open.asdict(),
+        "open_fault": rep_fault.asdict(),
+        "slo_under_fault": slo,
+        "p99_degradation_budget_pct": P99_DEGRADATION_BUDGET_PCT,
+        "scheduler_stress": _scheduler_stress(),
+    }
+
+
+def run():
+    r = bench()
+    lines = []
+    for tag in ("closed_clean", "open_clean", "open_fault"):
+        rep = r[tag]
+        us = (rep["wall_s"] / max(rep["total_tokens"], 1)) * 1e6
+        lines.append((
+            f"traffic/qwen2-smoke/{tag.replace('_', '-')}", f"{us:.0f}",
+            f"tok_per_s={rep['tok_per_s']:.1f} "
+            f"p50_ttft_ms={rep['p50_ttft_ms']:.1f} "
+            f"p99_ttft_ms={rep['p99_ttft_ms']:.1f} "
+            f"finished={rep['n_finished']} prefix_hits={rep['prefix_hits']}"))
+    slo = r["slo_under_fault"]
+    lines.append((
+        "traffic/slo_under_fault",
+        f"{slo['p99_ttft_degradation_pct']:.1f}",
+        f"p99_ttft_degradation_pct={slo['p99_ttft_degradation_pct']:.1f} "
+        f"injected={slo['faults_injected']} missed={slo['faults_missed']} "
+        f"corrected={slo['faults_corrected']} "
+        f"bit_identical={slo['token_streams_identical']}"))
+    st = r["scheduler_stress"]
+    lines.append((
+        "traffic/scheduler-stress", f"{1e6 / max(st['pops_per_s'], 1):.2f}",
+        f"queued={st['popped']} rejected={st['rejected']} "
+        f"pops_per_s={st['pops_per_s']:.0f} "
+        f"wait_bound_held={st['wait_bound_held']}"))
+    return lines
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="write the full report (BENCH_PR8.json)")
+    parser.add_argument("--check", action="store_true",
+                        help="gate: zero missed + p99 within budget")
+    args = parser.parse_args(argv)
+    r = bench()
+    slo = r["slo_under_fault"]
+    print(json.dumps({k: r[k] for k in
+                      ("slo_under_fault", "scheduler_stress")}, indent=1))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(r, fh, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        assert slo["faults_missed"] == 0
+        assert slo["token_streams_identical"]
+        assert slo["p99_ttft_degradation_pct"] <= P99_DEGRADATION_BUDGET_PCT, \
+            f"p99 degradation {slo['p99_ttft_degradation_pct']:.1f}% " \
+            f"over budget {P99_DEGRADATION_BUDGET_PCT:.0f}%"
+        assert r["scheduler_stress"]["wait_bound_held"]
+        print("traffic gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_chaos          -> single-device chaos-campaign sweep: per-event
                           outcomes + coverage counters (missed_anywhere,
                           false_alarms and uncovered_surfaces must be 0)
+  bench_traffic        -> heavy-traffic paged-KV serving: closed + open-loop
+                          TTFT/throughput, the SAME trace drilled (SDC +
+                          page-DRAM, zero missed), SLO scheduler stress
   roofline             -> per (arch x shape) roofline terms from the dry-run
 
 ``--json PATH`` additionally writes a machine-readable name -> {us, derived}
@@ -34,11 +37,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_chaos, bench_elastic, bench_kernels,
                             bench_overhead, bench_serving,
-                            bench_strong_scaling, bench_train_step,
-                            bench_weak_scaling, roofline)
+                            bench_strong_scaling, bench_traffic,
+                            bench_train_step, bench_weak_scaling, roofline)
     mods = [bench_weak_scaling, bench_overhead, bench_strong_scaling,
             bench_kernels, bench_train_step, bench_serving, bench_elastic,
-            bench_chaos, roofline]
+            bench_chaos, bench_traffic, roofline]
     print("name,us_per_call,derived")
     rows = {}
     failed = 0

@@ -48,8 +48,9 @@ from repro.chaos.faults import (Episode, FailureInjector, FaultSpace,
                                 FaultSpec, SDCInjector, SDCPlan,
                                 ensure_registered, flip_bit, get_surface)
 
-__all__ = ["TrainConfig", "ServeConfig", "FaultResult", "CampaignResult",
-           "CampaignRunner", "classify", "episode_outcome", "SOLVER_TOL"]
+__all__ = ["TrainConfig", "ServeConfig", "TrafficConfig", "FaultResult",
+           "CampaignResult", "CampaignRunner", "classify",
+           "episode_outcome", "SOLVER_TOL"]
 
 # end-state tolerance for the solver workload: both the drilled and the
 # golden solve converge to ||b - A x|| <= rtol*||b||, so their iterates
@@ -90,6 +91,27 @@ class ServeConfig:
     max_new_tokens: int = 5
     mesh: Tuple[int, int] = (4, 2)          # (data, model), used when the
     #                                         devices exist; else (1, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """The traffic workload under drill (PR 8): the PAGED serving engine
+    replaying a small open-loop trace (`repro.serve.traffic`), so
+    dram_kv_cache faults land in the page pools and are erasure-repaired
+    at page granularity.  ``spec.step`` indexes the clean replay's
+    EXECUTED decode steps (open-loop idle gaps skip step numbers, so raw
+    step numbers could name a step that never runs)."""
+    arch: str = "qwen2-0.5b"
+    slots: int = 4
+    max_len: int = 64
+    page_size: int = 8
+    chunk_prefill: int = 16
+    n_requests: int = 10
+    rate_per_step: float = 0.6
+    prompt_max: int = 24
+    out_max: int = 6
+    shared_prefix_len: int = 16
+    trace_seed: int = 9
 
 
 @dataclasses.dataclass
@@ -235,17 +257,21 @@ class CampaignRunner:
     def __init__(self, space: FaultSpace, *,
                  train: Optional[TrainConfig] = None,
                  serve: Optional[ServeConfig] = None,
+                 traffic: Optional[TrafficConfig] = None,
                  verbose: bool = False):
         ensure_registered()
         self.space = space
         self.train = train or TrainConfig()
         self.serve = serve or ServeConfig()
+        self.traffic = traffic or TrafficConfig()
         self.verbose = verbose
         self._train_golden: Dict[tuple, dict] = {}
         self._serve_golden: Dict[tuple, dict] = {}
         self._solver_golden: Optional[dict] = None
+        self._traffic_golden: Optional[dict] = None
         self._serve_eng = None      # the warmed drill-free engine, reused
         self._serve_scrub_eng = None  # ditto with the at-rest scrubber on
+        self._traffic_eng = None    # the warmed drill-free paged engine
         self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
 
     def _log(self, msg: str):
@@ -292,6 +318,7 @@ class CampaignRunner:
             # exception; recreate so the runner stays reusable
             self._serve_eng = None
             self._serve_scrub_eng = None
+            self._traffic_eng = None
             self._tmp.cleanup()
             self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
         meta = {
@@ -299,6 +326,7 @@ class CampaignRunner:
             "n_devices": len(jax.devices()),
             "train": dataclasses.asdict(self.train),
             "serve": dataclasses.asdict(self.serve),
+            "traffic": dataclasses.asdict(self.traffic),
             "solver": dataclasses.asdict(self._solver_cfg("anti")),
             "n_episodes": sum(1 for ep in self.space.episodes
                               if ep.workload in workloads),
@@ -314,6 +342,8 @@ class CampaignRunner:
             return self._run_solver(spec)
         if spec.workload == "serve":
             return self._run_serve(spec)
+        if spec.workload == "traffic":
+            return self._run_traffic(spec)
         if spec.kind == "checksum_state_flip":
             return self._run_kernel_state_flip(spec)
         if spec.kind == "flash_state_flip":
@@ -1001,6 +1031,151 @@ class CampaignRunner:
                      f"{'unchanged' if end_state == 'bit_identical' else 'diverged'}")
         raise ValueError(f"unhandled serve kind {spec.kind!r}")
 
+    # -- traffic workload (paged engine under an open-loop trace) -------------
+
+    def _traffic_trace(self):
+        from repro.configs.base import smoke_config
+        from repro.serve.traffic import TrafficConfig as TraceConfig
+        from repro.serve.traffic import make_trace
+        t = self.traffic
+        cfg = smoke_config(t.arch)
+        return cfg, make_trace(TraceConfig(
+            n_requests=t.n_requests, vocab=cfg.vocab_size, arrival="open",
+            rate_per_step=t.rate_per_step, prompt_max=t.prompt_max,
+            out_max=t.out_max, shared_prefix_len=t.shared_prefix_len,
+            seed=t.trace_seed))
+
+    def _traffic_engine(self, sdc=None):
+        from repro.models import transformer as tf
+        from repro.serve.engine import PagedServeEngine
+        from repro.serve.scheduler import SchedPolicy, SLOScheduler
+
+        cfg, trace = self._traffic_trace()
+        if sdc is None and self._traffic_eng is not None:
+            self._traffic_eng.reset()
+            return self._traffic_eng, trace
+        t = self.traffic
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        eng = PagedServeEngine(
+            cfg, params, slots=t.slots, max_len=t.max_len,
+            page_size=t.page_size, chunk_prefill=t.chunk_prefill,
+            prefix_cache=True, scrub_every=1, abft_reduce="correct",
+            sdc=sdc,
+            scheduler=SLOScheduler(SchedPolicy(max_queue=4 * t.n_requests)))
+        eng.warm(prompt_len=8, decode_steps=2)
+        eng.reset()
+        if sdc is None:
+            self._traffic_eng = eng
+        return eng, trace
+
+    def _golden_traffic(self) -> dict:
+        """Clean replay of the traffic trace on the paged engine, cached.
+        Records the EXECUTED decode steps: open-loop idle gaps fast-forward
+        the step clock, so a drill schedule in raw step numbers could name
+        a step that never runs — specs index this list instead."""
+        from repro.serve.traffic import run_trace
+        if self._traffic_golden is not None:
+            return self._traffic_golden
+        self._log("golden traffic (paged engine, open loop)")
+        eng, trace = self._traffic_engine()
+        seen: List[int] = []
+        rep = run_trace(eng, trace, on_step=lambda e, s: seen.append(s))
+        self._traffic_golden = {
+            "outputs": rep.outputs, "report": rep.asdict(),
+            "detections": rep.detections, "seen": seen, "trace": trace}
+        return self._traffic_golden
+
+    def _run_traffic(self, spec: FaultSpec) -> FaultResult:
+        from repro.serve.traffic import run_trace
+        golden = self._golden_traffic()
+        seen = golden["seen"]
+        if spec.step >= len(seen):
+            raise _Skip(f"executed-step index {spec.step} out of range "
+                        f"(clean replay ran {len(seen)} decode steps)")
+        fire = seen[spec.step]
+        if spec.kind == "sdc_collective":
+            if spec.shard != 0:
+                raise _Skip("traffic engine runs meshless (model extent 1)")
+            eng, trace = self._traffic_engine(
+                sdc=SDCInjector(SDCPlan(((fire, 0, spec.delta),))))
+            rep = run_trace(eng, trace)
+            st = eng.stats
+            if not st.events:
+                raise _Skip(f"planned SDC at decode step {fire} never "
+                            f"fired ({st.decode_steps} decode steps ran)")
+            detected = st.detections > 0
+            corrected = st.corrections > 0 and all(
+                e.corrected for e in st.events)
+            end_state = ("bit_identical"
+                         if rep.outputs == golden["outputs"] else "diverged")
+            return self._result(
+                spec, detected=detected, corrected=corrected,
+                rung="abft_inflight" if detected else None,
+                latency=st.recovery_latency_s() if detected else None,
+                end_state=end_state,
+                max_abs_diff=0.0 if end_state == "bit_identical" else None,
+                note=f"{st.detections} detection(s) over {st.decode_steps} "
+                     f"decode steps under load; located "
+                     + ", ".join(f"(r{e.row},c{e.col})" for e in st.events))
+        if spec.kind in ("dram_kv_cache", "dram_params"):
+            eng, trace = self._traffic_engine()
+            fired = {}
+
+            def on_step(engine, step):
+                if step == fire and not fired:
+                    if spec.kind == "dram_kv_cache":
+                        kv = engine.kv
+                        live = kv.live_pages()
+                        phys = spec.page if spec.page >= 0 else \
+                            (live[0] if live else 1)
+                        key = sorted(kv.pools)[
+                            spec.seed % len(kv.pools)]
+                        kv.corrupt_page(key, phys, bit=spec.bit)
+                        fired["leaf"] = f"{key}[page {phys}]"
+                        fired["undo"] = lambda: None  # reset() rebuilds kv
+                        fired["page"] = phys
+                    else:
+                        fired["leaf"], fired["undo"] = _flip_engine_bit(
+                            engine, spec)
+
+            try:
+                rep = run_trace(eng, trace, on_step=on_step)
+            finally:
+                if "undo" in fired:
+                    fired["undo"]()   # shared engine: restore params leaf
+            st = eng.stats
+            if not fired:
+                raise _Skip(f"flip step {fire} never reached "
+                            f"({st.decode_steps} decode steps ran)")
+            if spec.kind == "dram_kv_cache":
+                evs = [e for e in st.scrub_events if e.domain == "kv"]
+                rung = "scrub:page_repair"
+            else:
+                evs = [e for e in st.scrub_events if e.domain != "kv"]
+                rung = "scrub:restore"
+            detected = bool(evs)
+            corrected = detected and all(e.repaired for e in evs)
+            end_state = ("bit_identical"
+                         if rep.outputs == golden["outputs"] else "diverged")
+            pages = sorted({e.page for e in evs if e.page >= 0})
+            return self._result(
+                spec, detected=detected, corrected=corrected,
+                rung=rung if detected else None,
+                latency=(sum(e.wall_s for e in evs) / len(evs)
+                         if evs else None),
+                end_state=end_state,
+                max_abs_diff=0.0 if end_state == "bit_identical" else None,
+                note=f"bit {spec.bit} flipped in {fired.get('leaf')!r} at "
+                     f"decode step {fire}; scrub repaired "
+                     + (f"page(s) {pages} of "
+                        + ", ".join(sorted({e.leaf for e in evs}))
+                        if evs and spec.kind == "dram_kv_cache" else
+                        ", ".join(f"{e.domain}:{e.leaf}" for e in evs)
+                        or "never tripped")
+                     + f"; token streams "
+                     f"{'bit-identical' if end_state == 'bit_identical' else 'diverged'}")
+        raise ValueError(f"unhandled traffic kind {spec.kind!r}")
+
     # -- solver workload (second protected algorithm family) ------------------
 
     def _solver_cfg(self, placement: str):
@@ -1179,6 +1354,9 @@ class CampaignRunner:
             return self._episode_train(ep)
         if ep.workload == "serve":
             return self._episode_serve(ep)
+        if ep.workload == "traffic":
+            raise _Skip("no traffic episode adapter (single faults only; "
+                        "the SLO story is bench_traffic's)")
         return self._episode_solver(ep)
 
     def _skipped_episode(self, ep: Episode, why: str) -> FaultResult:
@@ -1649,6 +1827,8 @@ class CampaignRunner:
             self._golden_serve()
         if "solver" in workloads and self._solver_golden is None:
             self._golden_solver()
+        if "traffic" in workloads and self._traffic_golden is None:
+            self._golden_traffic()
         for (shape, tag, steps), g in sorted(self._train_golden.items()):
             detected = g["detections"] > 0
             outcome = classify(injected=False, detected=detected,
@@ -1703,6 +1883,27 @@ class CampaignRunner:
                 end_state="bit_identical", max_abs_diff=0.0,
                 wall_s=g["stats"]["decode_s"] + g["stats"]["prefill_s"],
                 note=note))
+        if self._traffic_golden is not None:
+            g = self._traffic_golden
+            r = g["report"]
+            detected = g["detections"] > 0
+            rows.append(FaultResult(
+                name="traffic:clean_sweep:paged", workload="traffic",
+                kind="clean_sweep", surface="serve.paged_kv/pages",
+                protected=True, promise="none",
+                outcome=classify(injected=False, detected=detected,
+                                 corrected=False,
+                                 end_state="bit_identical",
+                                 promise="none"),
+                detected=detected, corrected=False, rung=None,
+                recovery_latency_s=None, end_state="bit_identical",
+                max_abs_diff=0.0, wall_s=r["wall_s"],
+                note=f"{g['detections']} detection(s) over "
+                     f"{r['decode_steps']} decode steps of open-loop load "
+                     f"({r['n_finished']}/{r['n_requests']} finished, "
+                     f"{r['scrub_checks']} page scrubs, "
+                     f"{r['prefix_hits']} prefix hits, "
+                     f"p99 TTFT {r['p99_ttft_ms']:.1f} ms)"))
         if self._solver_golden is not None:
             g = self._solver_golden
             detected = g["trips"] > 0

@@ -160,7 +160,8 @@ def ensure_registered() -> Dict[str, Surface]:
     for mod in ("repro.dist.collectives", "repro.kernels.ops",
                 "repro.kernels.flash_attention", "repro.ckpt.diskless",
                 "repro.ft.runtime", "repro.serve.engine",
-                "repro.models.layers", "repro.solvers.subspace_cg"):
+                "repro.serve.paged_kv", "repro.models.layers",
+                "repro.solvers.subspace_cg"):
         importlib.import_module(mod)
     return dict(_REGISTRY)
 
@@ -194,19 +195,24 @@ KINDS = ("sdc_collective", "checksum_state_flip", "flash_state_flip",
          "dram_opt_state", "dram_kv_cache", "shard_loss", "pod_loss",
          "slow_pod")
 
-WORKLOADS = ("train", "serve", "solver")
+WORKLOADS = ("train", "serve", "solver", "traffic")
 
 # kind -> which workloads can drill it and which surface it targets.  The
 # "solver" workload is the second protected algorithm family (PR 7): the
 # redundant-subspace-correction CG in `repro.solvers.subspace_cg`, where
 # the same fault kinds map onto solver-native surfaces — an SDC lands in
 # one replica's block correction, a DRAM flip hits the resident iterate,
-# and shard/pod loss kills subspace workers.
+# and shard/pod loss kills subspace workers.  The "traffic" workload
+# (PR 8) drills the PAGED serving engine under an open-loop load trace:
+# same logits-reduce and params surfaces as "serve", but dram_kv_cache
+# lands in the page pools where the per-page checksums own detection +
+# erasure repair (surface "serve.paged_kv/pages").
 _KIND_INFO = {
     "sdc_collective": dict(
-        workloads=("train", "serve", "solver"),
+        workloads=("train", "serve", "solver", "traffic"),
         surface={"train": "dist.collectives/abft_psum",
                  "serve": "serve.engine/logits_reduce",
+                 "traffic": "serve.engine/logits_reduce",
                  "solver": "solvers.subspace_cg/correction_sum"}),
     "checksum_state_flip": dict(
         workloads=("train",), surface="kernels.ops/acc_state"),
@@ -217,14 +223,17 @@ _KIND_INFO = {
     "gather_corruption": dict(
         workloads=("train",), surface="models.layers/embedding_gather"),
     "dram_params": dict(
-        workloads=("train", "serve", "solver"),
+        workloads=("train", "serve", "solver", "traffic"),
         surface={"train": "state.params_at_rest",
                  "serve": "state.params_at_rest",
+                 "traffic": "state.params_at_rest",
                  "solver": "solvers.subspace_cg/iterate_at_rest"}),
     "dram_opt_state": dict(
         workloads=("train",), surface="state.opt_state_at_rest"),
     "dram_kv_cache": dict(
-        workloads=("serve",), surface="serve.engine/kv_cache_at_rest"),
+        workloads=("serve", "traffic"),
+        surface={"serve": "serve.engine/kv_cache_at_rest",
+                 "traffic": "serve.paged_kv/pages"}),
     "shard_loss": dict(
         workloads=("train", "solver"),
         surface={"train": "ckpt.diskless/shards",
@@ -249,6 +258,7 @@ RATE_KINDS = {
               "shard_loss"),
     "serve": ("sdc_collective", "dram_params", "dram_kv_cache"),
     "solver": ("sdc_collective", "dram_params", "shard_loss", "pod_loss"),
+    "traffic": ("sdc_collective", "dram_params", "dram_kv_cache"),
 }
 
 
@@ -271,10 +281,11 @@ class FaultSpec:
     reproducible.
     """
     kind: str
-    workload: str            # "train" | "serve" | "solver"
+    workload: str            # "train" | "serve" | "solver" | "traffic"
     step: int = 2            # step / decode step / CG iteration it fires at
     shard: int = 0           # DP or model-axis shard (sdc, shard_loss)
     pod: int = 0             # pod index (pod_loss, slow_pod)
+    page: int = -1           # KV page (traffic dram_kv_cache); -1 = any live
     delta: float = 1e4       # additive corruption magnitude (sdc drills)
     bit: int = 30            # bit index for flip_bit faults (30 = exponent)
     delay_s: float = 0.05    # injected per-step delay floor (slow_pod)
@@ -306,6 +317,8 @@ class FaultSpec:
             bits.append(f"sh{self.shard}")
         if self.pod:
             bits.append(f"p{self.pod}")
+        if self.page != -1:
+            bits.append(f"pg{self.page}")
         if self.delta != 1e4:
             bits.append(f"d{self.delta:g}")
         if self.bit != 30:
@@ -485,6 +498,31 @@ class FaultSpace:
                       shard=4),
             FaultSpec(kind="pod_loss", workload="solver", step=5, pod=1,
                       variant="paired"),
+        ))
+
+    @classmethod
+    def traffic_smoke(cls) -> "FaultSpace":
+        """The paged-serving load drill CI's traffic-smoke job runs: the
+        SAME open-loop trace replayed clean and under these faults, gated
+        on zero missed + bit-identical token streams.  Kept OUT of
+        `smoke()`/`default()` on purpose — the chaos-campaign job asserts
+        its workload set is exactly {train, serve, solver}; traffic runs
+        in its own job against its own golden replay."""
+        return cls("traffic-smoke", (
+            FaultSpec(kind="sdc_collective", workload="traffic", step=3,
+                      shard=0, delta=1e4),
+            FaultSpec(kind="sdc_collective", workload="traffic", step=7,
+                      shard=0, delta=-3e4, seed=1),
+            # page -1: aim at whichever page is live when the step fires;
+            # explicit pages pin the drill to a prefix page (low phys ids
+            # are allocated first, so page 1 holds the shared system
+            # prompt when prefix caching is on)
+            FaultSpec(kind="dram_kv_cache", workload="traffic", step=5,
+                      bit=30),
+            FaultSpec(kind="dram_kv_cache", workload="traffic", step=9,
+                      page=1, bit=29),
+            FaultSpec(kind="dram_params", workload="traffic", step=4,
+                      bit=30),
         ))
 
     @classmethod

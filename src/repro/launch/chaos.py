@@ -41,7 +41,12 @@ WORKLOAD_SETS = {
     "train": ("train",),
     "serve": ("serve",),
     "solver": ("solver",),
+    "traffic": ("traffic",),
     "both": ("train", "serve"),
+    # "all" stays {train, serve, solver} on purpose: the committed default
+    # campaigns (and the chaos-campaign CI gate on their workload set)
+    # predate the traffic workload, which runs in its own traffic-smoke
+    # job against its own space
     "all": ("train", "serve", "solver"),
 }
 
@@ -73,7 +78,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--space", default="default",
                     choices=("default", "smoke", "cartesian",
-                             "episodes-default", "episodes-smoke"),
+                             "episodes-default", "episodes-smoke",
+                             "traffic-smoke"),
                     help="which FaultSpace to sweep")
     ap.add_argument("--replay", metavar="CAMPAIGN.json", default=None,
                     help="re-run the exact specs + episodes a previous "
@@ -108,6 +114,7 @@ def main(argv=None) -> int:
             "cartesian": FaultSpace.cartesian,
             "episodes-default": FaultSpace.episodes_default,
             "episodes-smoke": FaultSpace.episodes_smoke,
+            "traffic-smoke": FaultSpace.traffic_smoke,
         }[args.space]()
     if args.sample is not None:
         space = space.sample(args.sample, seed=args.seed)

@@ -64,7 +64,8 @@ from repro.models import transformer as tf
 from repro.models.layers import softcap_fn
 from repro.train.step import StepOptions
 
-__all__ = ["Request", "ServeEngine", "EngineStats", "SDCEvent", "ScrubEvent"]
+__all__ = ["Request", "ServeEngine", "PagedServeEngine", "EngineStats",
+           "SDCEvent", "ScrubEvent"]
 
 # the protection domains/surfaces this module owns (repro.chaos drills
 # them): the verified unembed reduction is protected; the KV cache sitting
@@ -140,7 +141,8 @@ class ScrubEvent:
     step: int                 # engine decode step the verify ran at
     domain: str               # "kv" | "params"
     leaf: str                 # keystr of the tripped leaf
-    slot: int = -1            # KV slot rebuilt (-1 for params)
+    slot: int = -1            # KV slot rebuilt (-1 for params / paged)
+    page: int = -1            # physical page rebuilt (PagedServeEngine)
     repaired: bool = False
     wall_s: float = 0.0       # verify + repair wall
 
@@ -326,7 +328,7 @@ class ServeEngine:
         for _ in range(max_steps):
             self._admit()
             if not any(self.active):
-                if not self.queue:
+                if not self._pending():
                     break
                 continue
             if on_step is not None:
@@ -452,14 +454,26 @@ class ServeEngine:
 
     def _scrub_check(self):
         """Verify-on-read: recompute KV and params fingerprints against the
-        armed values.  A tripped KV slot is rebuilt by the erasure solve
-        ``ksum - sum(other slots)`` (single-slot fault model, like f=1
-        diskless); a tripped params leaf is restored from the origin copy."""
+        armed values (split into `_scrub_kv` / `_scrub_params` so the paged
+        engine can swap in its page-granular unit)."""
         t0 = time.perf_counter()
         self.stats.scrub_checks += 1
         step = self.stats.decode_steps
         events: List[ScrubEvent] = []
+        self._scrub_kv(step, events)
+        self._scrub_params(step, events)
+        if events:
+            wall = time.perf_counter() - t0
+            for e in events:
+                e.wall_s = wall
+            self.stats.detections += len(events)
+            self.stats.corrections += sum(1 for e in events if e.repaired)
+            self.stats.scrub_events.extend(events)
 
+    def _scrub_kv(self, step: int, events: List[ScrubEvent]):
+        """A tripped KV slot is rebuilt by the erasure solve
+        ``ksum - sum(other slots)`` (single-slot fault model, like f=1
+        diskless)."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
         leaves = []
         for path, x in flat:
@@ -488,6 +502,8 @@ class ServeEngine:
         if any(e.domain == "kv" for e in events):
             self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
 
+    def _scrub_params(self, step: int, events: List[ScrubEvent]):
+        """A tripped params leaf is restored from the origin copy."""
         pflat, ptd = jax.tree_util.tree_flatten_with_path(self.params)
         oleaves = jax.tree.leaves(self._param_origin)
         pleaves = []
@@ -511,13 +527,25 @@ class ServeEngine:
                 params = jax.device_put(params, self._param_sh)
             self.params = params
 
-        if events:
-            wall = time.perf_counter() - t0
-            for e in events:
-                e.wall_s = wall
-            self.stats.detections += len(events)
-            self.stats.corrections += sum(1 for e in events if e.repaired)
-            self.stats.scrub_events.extend(events)
+    # -- subclass hooks --------------------------------------------------------
+    def _pending(self) -> bool:
+        """Anything left to admit? (run()'s drain condition; the paged
+        engine adds its scheduler queue and in-flight chunked prefill)."""
+        return bool(self.queue)
+
+    def _pre_decode(self):
+        """Before each compiled decode call (paged engine: materialize the
+        dense working cache from the page pools)."""
+
+    def _post_decode(self):
+        """After the decode mutated the cache, before positions advance.
+        Contiguous engine: whole-cache re-arm — PR 6 granularity; the
+        paged engine overrides this with per-page write-back + re-arm."""
+        if self.scrub_every and not self._warming:
+            self._arm_kv()  # re-arm: the decode mutated every live slot
+
+    def _retire_slot(self, s: int):
+        """A slot's request just finished (paged engine frees its pages)."""
 
     def _admit(self):
         admitted = False
@@ -635,6 +663,7 @@ class ServeEngine:
         if (self.scrub_every and not self._warming
                 and self.stats.decode_steps % self.scrub_every == 0):
             self._scrub_check()
+        self._pre_decode()
         t0 = time.perf_counter()
         ev: Optional[SDCEvent] = None
         if self.sdc is not None and not self._warming:
@@ -674,8 +703,7 @@ class ServeEngine:
             self.stats.events.append(ev)
         else:
             self.stats.decode_step_s.append(wall)
-        if self.scrub_every and not self._warming:
-            self._arm_kv()  # re-arm: the decode mutated every live slot
+        self._post_decode()
 
         self.pos = self.pos + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)
@@ -696,4 +724,252 @@ class ServeEngine:
                 if req.decode_tok_s is not None:
                     self.stats.tok_s.append(req.decode_tok_s)
                 finished.append(req)
+                self._retire_slot(s)
                 self.active[s] = None
+
+
+class PagedServeEngine(ServeEngine):
+    """`ServeEngine` on a paged/block KV cache (serve.paged_kv) with prefix
+    caching, chunked prefill, and an optional SLO-aware scheduler.
+
+    The page pools are the AUTHORITATIVE storage: every decode step gathers
+    them into the fixed-shape dense cache the inherited compiled programs
+    consume (`_pre_decode`), and writes each slot's freshly decoded K/V
+    back into its page afterwards (`_post_decode`) — re-arming exactly the
+    pages it touched instead of the whole cache (the PR 6 scrub-unit fix).
+    A retiring slot frees its pages (zero-at-free), and the at-rest scrub
+    verifies/repairs at page granularity via the pool's erasure sum.
+
+    Decode parity: with ``chunk_prefill=0`` and no prefix hit, admission
+    runs the parent's compiled prefill program verbatim and the gathered
+    dense cache differs from the contiguous engine's only at causally
+    masked positions (zeros vs prefill pad garbage) — decode logits, and
+    therefore the emitted token streams, are bit-identical
+    (tests/test_traffic.py).  Chunked and prefix-shared prefills change
+    the prefill computation's shape, so their guarantee is on the argmax
+    token stream, not logits bits.
+
+    ``scheduler``: an `SLOScheduler` (serve.scheduler) takes over queueing
+    — `submit()` routes through its admission control (rejections land in
+    ``self.rejected``) and `_admit` pops by aged effective priority.
+    ``chunk_prefill=C``: prompts longer than C prefill C tokens per engine
+    step, so a long prompt never delays a running decode step by more than
+    one chunk's work (tests/test_scheduler.py); when no decode is active
+    the chunks free-run back-to-back.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, page_size: int = 8,
+                 chunk_prefill: int = 0, prefix_cache: bool = True,
+                 scheduler=None, max_prefixes: int = 16, **kw):
+        from repro.serve.paged_kv import PagedKVCache  # noqa: F401 (type)
+        self.page_size = page_size
+        self.chunk_prefill = chunk_prefill
+        self.prefix_cache = prefix_cache
+        self.max_prefixes = max_prefixes
+        self.scheduler = scheduler
+        self.kv = None                    # built by _fresh_cache
+        self.rejected: List[Request] = []
+        self._prefilling: Optional[dict] = None
+        self._chunk_progs = {}
+        super().__init__(cfg, params, **kw)
+
+    # -- paged storage ---------------------------------------------------------
+    def _fresh_cache(self):
+        from repro.serve.paged_kv import PagedKVCache
+        dense = super()._fresh_cache()
+        shapes = {}
+        for path, x in jax.tree_util.tree_flatten_with_path(dense)[0]:
+            # paged leaves: per-slot sequence-indexed float K/V, i.e.
+            # [repeats, slots, max_len, *tail]; recurrent state (mamba,
+            # xLSTM) has no max_len axis and stays dense-only
+            if (jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 4
+                    and x.shape[1] == self.slots
+                    and x.shape[2] == self.max_len):
+                shapes[jax.tree_util.keystr(path)] = (x.shape, x.dtype)
+        self.kv = PagedKVCache(shapes, slots=self.slots,
+                               max_len=self.max_len,
+                               page_size=self.page_size,
+                               max_prefixes=self.max_prefixes)
+        return dense
+
+    def _arm_kv(self):
+        self.kv.arm_all()
+
+    def _scrub_kv(self, step: int, events: List[ScrubEvent]):
+        for key, page in self.kv.scrub():
+            events.append(ScrubEvent(step=step, domain="kv", leaf=key,
+                                     page=page, repaired=True))
+
+    def _pre_decode(self):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        leaves = []
+        for path, x in flat:
+            key = jax.tree_util.keystr(path)
+            leaves.append(self.kv.gather(key) if key in self.kv.pools else x)
+        self.cache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _post_decode(self):
+        # page-granular write-back + re-arm: ONE page per leaf per active
+        # slot (the decode wrote exactly position pos[s])
+        writes = [(s, int(p)) for s, (r, p) in
+                  enumerate(zip(self.active, np.asarray(self.pos)))
+                  if r is not None]
+        if not writes:
+            return
+        self.kv.begin_mutation()
+        for path, x in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            key = jax.tree_util.keystr(path)
+            if key not in self.kv.pools:
+                continue
+            for s, p in writes:
+                self.kv.write_token(key, s, p, x[:, s, p])
+
+    def _retire_slot(self, s: int):
+        self.kv.free_slot(s)
+
+    # -- queueing / admission --------------------------------------------------
+    def submit(self, req: Request, priority: Optional[int] = None):
+        if not req.t_submit:
+            req.t_submit = time.perf_counter()
+        if self.scheduler is not None and not self._warming:
+            if not self.scheduler.submit(req, priority=priority):
+                req.done = True
+                self.rejected.append(req)
+            return
+        self.queue.append(req)
+
+    def reset(self):
+        super().reset()          # rebuilds self.kv via _fresh_cache
+        self.rejected = []
+        self._prefilling = None
+
+    def _pending(self) -> bool:
+        return (bool(self.queue) or self._prefilling is not None
+                or (self.scheduler is not None and len(self.scheduler) > 0))
+
+    def _next_request(self) -> Optional[Request]:
+        if self.scheduler is not None:
+            req = self.scheduler.pop()
+            if req is not None:
+                return req
+        return self.queue.popleft() if self.queue else None
+
+    def _admit(self):
+        if self._prefilling is not None:
+            self._advance_prefill()
+            if self._prefilling is not None:
+                return          # one chunk per engine step under decode load
+        while True:
+            free = [s for s in range(self.slots) if self.active[s] is None]
+            if not free:
+                return
+            req = self._next_request()
+            if req is None:
+                return
+            self._start_admission(free[0], req)
+            if self._prefilling is not None:
+                self._advance_prefill()   # free-runs when no decode active
+                if self._prefilling is not None:
+                    return
+
+    def _start_admission(self, s: int, req: Request):
+        plen = len(req.prompt)
+        need = min(plen + req.max_new_tokens, self.max_len)
+        prompt = req.prompt if (self.prefix_cache
+                                and not self._warming) else None
+        start = self.kv.alloc_slot(s, need, prompt=prompt)
+        if start or (self.chunk_prefill and plen > self.chunk_prefill):
+            self._prefilling = {"slot": s, "req": req, "start": start}
+            return
+        # no prefix hit, no chunking: the parent's compiled prefill program
+        # verbatim — bit-identical admission vs the contiguous engine
+        t0 = time.perf_counter()
+        bucket = self._bucket(plen)
+        prompt_a = jnp.zeros((1, bucket), jnp.int32).at[0, :plen].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        logits, small_cache = self._get_prefill(bucket)(
+            self.params, prompt_a, jnp.asarray(plen, jnp.int32))
+        self._scatter_slot(s, small_cache, plen)
+        self._write_pages(s, small_cache, 0, plen)
+        tok = int(jnp.argmax(logits[0, plen - 1]))
+        self.stats.prefill_s += time.perf_counter() - t0
+        self._finish_admission(s, req, tok, plen)
+
+    def _finish_admission(self, s: int, req: Request, tok: int, plen: int):
+        req.output.append(tok)
+        req.t_first = time.perf_counter()
+        self.stats.prefills += 1
+        self.tokens = self.tokens.at[s, 0].set(tok)
+        self.pos = self.pos.at[s].set(plen)
+        self.active[s] = req
+        if self.prefix_cache and not self._warming:
+            self.kv.register_prefix(s, req.prompt)
+
+    def _write_pages(self, s: int, cache_tree, start: int, end: int):
+        """Persist positions [start, end) of a 1-slot cache into pages."""
+        if end <= start:
+            return
+        self.kv.begin_mutation()
+        for path, x in jax.tree_util.tree_flatten_with_path(cache_tree)[0]:
+            key = jax.tree_util.keystr(path)
+            if key in self.kv.pools:
+                self.kv.write(key, s, start, x[:, 0, start:end])
+
+    # -- chunked / prefix-shared prefill --------------------------------------
+    def _slot_cache(self, s: int, start: int):
+        """Dense 1-slot cache for the chunk program: this slot's pages
+        gathered, non-paged leaves sliced from the engine cache, block
+        indices set to the chunk's start position."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        leaves = []
+        for path, x in flat:
+            key = jax.tree_util.keystr(path)
+            if key in self.kv.pools:
+                leaves.append(self.kv.gather_slot(key, s))
+            elif getattr(path[-1], "key", None) == "index":
+                leaves.append(jnp.full((x.shape[0],), start, jnp.int32))
+            elif x.ndim >= 2 and x.shape[1] == self.slots:
+                leaves.append(x[:, s:s + 1])
+            else:
+                leaves.append(x)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def _get_chunk(self, bucket: int):
+        if bucket not in self._chunk_progs:
+            def fn(pr, tok, start, cache, _b=bucket):
+                positions = start + jnp.arange(_b)
+                logits, new_cache, _ = tf.forward(
+                    pr, tok, self.cfg, positions=positions, cache=cache,
+                    abft=self.abft)
+                return logits, new_cache
+            self._chunk_progs[bucket] = jax.jit(fn)
+        return self._chunk_progs[bucket]
+
+    def _advance_prefill(self):
+        """Process chunks of the in-flight prefill: one chunk when any
+        decode is running (the chunk budget is the most a decode step can
+        be delayed), back-to-back when the engine is otherwise idle."""
+        while self._prefilling is not None:
+            pf = self._prefilling
+            s, req, start = pf["slot"], pf["req"], pf["start"]
+            plen = len(req.prompt)
+            n = min(self.chunk_prefill or plen - start, plen - start)
+            t0 = time.perf_counter()
+            bucket = self._bucket(n)
+            toks = jnp.zeros((1, bucket), jnp.int32).at[0, :n].set(
+                jnp.asarray(req.prompt[start:start + n], jnp.int32))
+            cache = self._slot_cache(s, start)
+            logits, new_cache = self._get_chunk(bucket)(
+                self.params, toks, jnp.asarray(start, jnp.int32), cache)
+            # carry non-paged leaves (recurrent state) + index across chunks
+            self._scatter_slot(s, new_cache, start + n)
+            self._write_pages(s, new_cache, start, start + n)
+            pf["start"] = start + n
+            self.stats.prefill_s += time.perf_counter() - t0
+            if pf["start"] >= plen:
+                tok = int(jnp.argmax(logits[0, n - 1]))
+                self._prefilling = None
+                self._finish_admission(s, req, tok, plen)
+                return
+            if any(r is not None for r in self.active):
+                return

@@ -1,0 +1,306 @@
+"""Property tests for the paged KV cache (serve.paged_kv).
+
+The allocator + checksum invariants land test-first (PR 8's archetype):
+
+  * conservation — free list + live pages partition the pool exactly
+  * no page is referenced by two slots unless it is a prefix-registry page
+  * every page checksum is re-armed after each mutation, and a
+    single-page write dirties EXACTLY one checksum per leaf (the PR 6
+    scrub-unit regression)
+  * corrupt -> verify locates the page -> repair rebuilds it exactly
+
+The random-trace drivers below are always-on (seeded numpy); when
+hypothesis is installed the same state machine also runs under generated
+traces (guarded import — hypothesis is optional in this environment).
+"""
+import numpy as np
+import pytest
+
+from repro.serve.paged_kv import PagedKVCache
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SLOTS, MAX_LEN, PS = 3, 32, 8
+
+
+def make_kv(extra_pages=0, max_prefixes=4):
+    return PagedKVCache(
+        {"k": ((2, SLOTS, MAX_LEN, 4), np.float32),
+         "v": ((2, SLOTS, MAX_LEN, 4), np.float32)},
+        slots=SLOTS, max_len=MAX_LEN, page_size=PS,
+        extra_pages=extra_pages, max_prefixes=max_prefixes)
+
+
+def fill(rs, n, lo=1, hi=8):
+    """Integer-valued float payloads: the float64 checksum chain is exact,
+    so repair roundtrips bit-for-bit."""
+    return rs.randint(lo, hi, size=(2, n, 4)).astype(np.float32)
+
+
+def ok(kv):
+    kv.check_invariants()
+    assert kv.checksums_consistent()
+
+
+# ---------------------------------------------------------------------------
+# targeted invariants
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_write_free_conservation(rs):
+    kv = make_kv()
+    total_free = kv.n_free()
+    start = kv.alloc_slot(0, 20)
+    assert start == 0 and kv.n_free() == total_free - 3  # ceil(20/8) pages
+    kv.write("k", 0, 0, fill(rs, 20))
+    kv.write("v", 0, 0, fill(rs, 20))
+    ok(kv)
+    kv.free_slot(0)
+    assert kv.n_free() == total_free
+    ok(kv)   # freed pages are zeroed and checksum-consistent again
+
+
+def test_single_page_write_dirties_exactly_one_checksum(rs):
+    """The PR 6 scrub-unit fix: a one-token decode write re-arms one page
+    checksum per leaf — not the whole slot, not the whole cache."""
+    kv = make_kv()
+    kv.alloc_slot(0, 12)
+    kv.write("k", 0, 0, fill(rs, 10))
+    kv.write("v", 0, 0, fill(rs, 10))
+    fp_before = {key: kv.page_fp[key].copy() for key in kv.pools}
+
+    kv.begin_mutation()
+    kv.write_token("k", 0, 10, fill(rs, 1)[:, 0])
+    assert len(kv.last_rearmed) == 1, (
+        f"single-page write re-armed {kv.last_rearmed}")
+    (leaf, phys), = kv.last_rearmed
+    assert leaf == "k" and phys == kv.page_of(0, 10)
+    # every OTHER page checksum is untouched, including the other leaf's
+    for key in kv.pools:
+        same = kv.page_fp[key] == fp_before[key]
+        if key == leaf:
+            assert not same[phys] and same[np.arange(len(same)) != phys].all()
+        else:
+            assert same.all()
+    ok(kv)
+
+
+def test_write_across_page_boundary_rearms_both_pages(rs):
+    kv = make_kv()
+    kv.alloc_slot(0, 16)
+    kv.begin_mutation()
+    kv.write("k", 0, PS - 2, fill(rs, 4))   # straddles pages 0 and 1
+    pages = {p for _, p in kv.last_rearmed}
+    assert len(kv.last_rearmed) == 2 and len(pages) == 2
+    ok(kv)
+
+
+def test_prefix_sharing_refcounts_and_no_foreign_sharing(rs):
+    kv = make_kv()
+    prompt = list(range(100, 100 + 2 * PS))     # two full pages + none over
+    start = kv.alloc_slot(0, len(prompt) + 4, prompt=prompt)
+    assert start == 0 and kv.stats.prefix_misses == 1
+    kv.write("k", 0, 0, fill(rs, len(prompt)))
+    kv.write("v", 0, 0, fill(rs, len(prompt)))
+    kv.register_prefix(0, prompt)
+    assert kv.stats.prefix_insertions == 1
+    ok(kv)
+
+    # a second slot admitting the same prompt shares the full first page
+    # (register keeps (plen-1)//ps pages so a suffix token always remains)
+    start1 = kv.alloc_slot(1, len(prompt) + 4, prompt=prompt)
+    assert start1 == PS and kv.stats.prefix_hits == 1
+    shared = kv.page_of(1, 0)
+    assert shared == kv.page_of(0, 0) and kv.refcount[shared] == 3
+    ok(kv)   # shared page is registry-backed: not "foreign" sharing
+
+    # both slots retire; the registry still holds its reference
+    kv.free_slot(0)
+    kv.free_slot(1)
+    assert kv.refcount[shared] == 1
+    ok(kv)
+
+
+def test_copy_on_write_unshares(rs):
+    kv = make_kv()
+    prompt = list(range(2 * PS))
+    kv.alloc_slot(0, 2 * PS + 2, prompt=prompt)
+    kv.write("k", 0, 0, fill(rs, 2 * PS))
+    kv.write("v", 0, 0, fill(rs, 2 * PS))
+    kv.register_prefix(0, prompt)
+    kv.alloc_slot(1, 2 * PS + 2, prompt=prompt)
+    shared = kv.page_of(1, 0)
+    before = np.asarray(kv.pools["k"][:, kv.page_of(0, 0)]).copy()
+
+    kv.write("k", 1, 0, fill(rs, 2))    # write INTO the shared page
+    assert kv.stats.cow_copies == 1
+    assert kv.page_of(1, 0) != shared, "write must unshare first"
+    np.testing.assert_array_equal(
+        np.asarray(kv.pools["k"][:, kv.page_of(0, 0)]), before,
+        err_msg="slot 0's view of the shared page changed")
+    ok(kv)
+
+
+def test_corrupt_verify_locates_repair_exact(rs):
+    kv = make_kv()
+    kv.alloc_slot(0, 24)
+    kv.write("k", 0, 0, fill(rs, 24))
+    kv.write("v", 0, 0, fill(rs, 24))
+    target = kv.page_of(0, PS)          # a middle live page
+    golden = np.asarray(kv.pools["k"][:, target]).copy()
+
+    kv.corrupt_page("k", target, bit=30)
+    tripped = kv.verify()
+    assert tripped == [("k", target)], (
+        f"verify must locate exactly the corrupted page, got {tripped}")
+    assert kv.repair("k", target)
+    np.testing.assert_array_equal(
+        np.asarray(kv.pools["k"][:, target]), golden,
+        err_msg="erasure repair must rebuild the page exactly")
+    ok(kv)
+
+
+def test_corrupted_free_page_detected_and_rebuilt_to_zero(rs):
+    kv = make_kv()
+    kv.alloc_slot(0, 8)
+    kv.write("k", 0, 0, fill(rs, 8))
+    free_page = kv.free[0]
+    kv.corrupt_page("k", free_page, bit=30)
+    assert ("k", free_page) in kv.verify(), \
+        "zero-at-free: a corrupted free page must trip"
+    kv.repair("k", free_page)
+    assert not np.any(np.asarray(kv.pools["k"][:, free_page]))
+    ok(kv)
+
+
+def test_nan_poisoned_page_trips(rs):
+    kv = make_kv()
+    kv.alloc_slot(0, 8)
+    kv.write("k", 0, 0, fill(rs, 8))
+    phys = kv.page_of(0, 0)
+    kv.pools["k"] = kv.pools["k"].at[0, phys, 0, 0].set(np.nan)
+    assert ("k", phys) in kv.verify(), "NaN must not compare as clean"
+
+
+def test_pool_exhaustion_evicts_lru_prefix_then_raises(rs):
+    kv = make_kv(max_prefixes=4)
+    # slot 0 publishes a prefix, then retires: the registry alone holds it
+    prompt = list(range(PS + 1))
+    kv.alloc_slot(0, PS + 1, prompt=prompt)
+    kv.write("k", 0, 0, fill(rs, PS + 1))
+    kv.write("v", 0, 0, fill(rs, PS + 1))
+    kv.register_prefix(0, prompt)
+    kv.free_slot(0)
+    held = kv.n_free()
+    # exhaust the free list: the LRU prefix page must be evicted to serve
+    for s in range(SLOTS):
+        kv.alloc_slot(s, MAX_LEN)
+    assert kv.stats.prefix_evictions == 1 and not kv.prefixes
+    assert kv.n_free() == 0 and held == SLOTS * (MAX_LEN // PS) - 1
+    ok(kv)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv._alloc()
+
+
+def test_gather_matches_dense_layout(rs):
+    kv = make_kv()
+    start = kv.alloc_slot(1, 12)
+    vals = fill(rs, 12)
+    kv.write("k", 1, start, vals)
+    dense = np.asarray(kv.gather("k"))
+    assert dense.shape == (2, SLOTS, MAX_LEN, 4)
+    np.testing.assert_array_equal(dense[:, 1, :12], vals)
+    assert not dense[:, 0].any() and not dense[:, 2].any()
+    assert not dense[:, 1, 12:].any()
+
+
+# ---------------------------------------------------------------------------
+# random-trace state machine (always-on, seeded)
+# ---------------------------------------------------------------------------
+
+
+def _drive_trace(ops, rs):
+    """Interpret a trace of (op, r1, r2) triples against a live pool and a
+    host-side model of slot occupancy, checking every invariant after
+    every mutation."""
+    kv = make_kv(extra_pages=2)
+    slot_pos = {}            # slot -> (write head, prompt, need)
+    for op, r1, r2 in ops:
+        if op == "admit":
+            free = [s for s in range(SLOTS) if s not in slot_pos]
+            if not free:
+                continue
+            s = free[r1 % len(free)]
+            plen = 2 + r2 % (MAX_LEN - 6)
+            prompt = [101 + (r1 + i) % 7 for i in range(plen)]
+            need = min(plen + 4, MAX_LEN)
+            start = kv.alloc_slot(s, need, prompt=prompt)
+            for key in kv.pools:
+                kv.write(key, s, start,
+                         fill(rs, plen - start))
+            kv.register_prefix(s, prompt)
+            slot_pos[s] = plen
+        elif op == "decode":
+            if not slot_pos:
+                continue
+            s = sorted(slot_pos)[r1 % len(slot_pos)]
+            if slot_pos[s] >= MAX_LEN:
+                continue
+            kv.begin_mutation()
+            for key in kv.pools:
+                kv.write_token(key, s, slot_pos[s], fill(rs, 1)[:, 0])
+            # one page checksum per leaf per token — the scrub-unit fix
+            assert len(kv.last_rearmed) == len(kv.pools)
+            assert len({k for k, _ in kv.last_rearmed}) == len(kv.pools)
+            slot_pos[s] += 1
+        elif op == "free":
+            if not slot_pos:
+                continue
+            s = sorted(slot_pos)[r1 % len(slot_pos)]
+            kv.free_slot(s)
+            del slot_pos[s]
+        elif op == "corrupt_scrub":
+            live = kv.live_pages()
+            if not live:
+                continue
+            phys = live[r1 % len(live)]
+            key = sorted(kv.pools)[r2 % len(kv.pools)]
+            kv.corrupt_page(key, phys, bit=30)
+            assert (key, phys) in [tuple(t) for t in kv.scrub()]
+        kv.check_invariants()
+        assert kv.checksums_consistent(), f"after op {op}"
+    return kv
+
+
+OPS = ("admit", "decode", "decode", "decode", "free", "corrupt_scrub")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_trace_invariants(seed):
+    rs = np.random.RandomState(seed)
+    ops = [(OPS[rs.randint(len(OPS))], int(rs.randint(1 << 30)),
+            int(rs.randint(1 << 30))) for _ in range(60)]
+    kv = _drive_trace(ops, rs)
+    # drain: conservation must return every page to the free list except
+    # the ones the prefix registry intentionally holds
+    for s in range(SLOTS):
+        kv.free_slot(s)
+    registry_held = len({p for ps in kv.prefixes.values() for p in ps})
+    assert kv.n_free() == kv.n_pages - 1 - registry_held
+    kv.check_invariants()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(OPS),
+                              st.integers(0, 1 << 30),
+                              st.integers(0, 1 << 30)),
+                    min_size=1, max_size=40),
+           st.integers(0, 2 ** 31 - 1))
+    def test_hypothesis_trace_invariants(ops, seed):
+        _drive_trace(ops, np.random.RandomState(seed))
