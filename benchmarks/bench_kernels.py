@@ -1,27 +1,56 @@
-"""Kernel-level benches: the fused dual-checksum ABFT matmul's cost accounting.
+"""Kernel-level benches: pipelined mixed-precision ABFT matmul + autotuner.
 
 On this CPU container Pallas runs interpreted (no meaningful wall-time), so
-the kernel rows report (a) wall time of the jnp reference path (real), and
-(b) the STRUCTURAL roofline of the Pallas kernel on TPU v5e constants.
+the kernel rows report (a) wall time of real XLA paths where one exists, and
+(b) the STRUCTURAL overlap-aware model of the Pallas kernel on TPU v5e
+constants (``kernels.ops.plan_accounting``).
 
-The HBM accounting is per tiling plan (``kernels.ops.pick_blocks``) and is
-honest about re-streaming: A is read once per n-tile column, B once per
-m-tile row, C written once — ``gemm_bytes`` below.  The fused dual checksum
-adds ZERO extra reads in either direction (both reductions come off the
-VMEM-resident accumulator; ``extra_hbm_rd_col = extra_hbm_rd_row = 0``) and
-only the checksum-partial writes ([m/bm, f, n] + [n/bn, m, f] fp32,
-``cs_wr_bytes``).  The unfused alternative — separate encode einsums after
-the GEMM — would re-read all of C once per direction (``unfused_extra_rd``).
-Extra FLOPs are the two epilogue reductions: 4*f*m*n over 2*m*k*n, i.e.
-2f/k per direction pair (<0.5% at 2048^3 with f=2).
+Row groups:
+
+``kernel_abft_matmul/{shape}/{dtype}``
+    Per-dtype structural rows on the planned tiling.  The time model is
+    ``t_total = max(t_hbm, t_mxu) + exposed_epilogue``; with the pipelined
+    grid the dual-checksum epilogue (+ verify/correct prologue when a state
+    is carried) overlaps the next tile's A/B fetch, so only the VPU work
+    not hidden under that DMA is exposed.  ``exposed_frac`` compares the
+    pipelined grid against the serial layout (``pipeline=False``) that
+    runs the same stages back-to-back.  Extra FLOPs are the two epilogue
+    reductions: 4*f*m*n over 2*m*k*n (<0.5% at 2048^3 with f=2).
+
+``kernel_clean_sweep/{dtype}``
+    The layer-level ABFT GEMM (``core.abft_gemm``) run CLEAN over a shape
+    sweep per input dtype with dtype-aware detection eps; ``false_alarms``
+    must be 0 for every dtype (CI gates on this).
+
+``kernel_flip_drill/{dtype}``
+    A single bit-flip injected into the carried accumulator data between
+    two ``abft_matmul_acc`` chained calls; reports detected / located /
+    corrected booleans per dtype (int8 repairs are bit-exact: integer
+    sums < 2^24 are exact in the fp32 plain-sum checksum row).
+
+``kernel_autotune/{shape}/{dtype}``
+    The measured autotuner vs the pure cost model: top-K model-ranked
+    candidates are timed once (XLA twin on CPU — honest wall-clock of the
+    same semantics, the Pallas kernel itself on TPU) and the winner is
+    persisted.  ``beats_or_matches_model`` must be True on every measured
+    shape (the model plan is always candidate #0 of the measured set).
+
+``kernel_serve_projection/{dtype}``
+    Tokens/s projection of a 24-layer d=2048 MLP decode batch (256
+    tokens) through the overlap-aware model at each dtype's MXU rate.
+
+``kernel_flash_checked/...``
+    Checksummed flash attention epilogue cost (structural + interpret
+    ratio), now on the pipelined (k_steps+1) grid.
 """
+import os
+import tempfile
 import time
 
 import numpy as np
 
-PEAK_FLOPS = 197e12     # bf16 / chip
-HBM_BW = 819e9          # B/s
 F = 2                   # checksums per direction (plain + weighted)
+DTYPES = ("float32", "bfloat16", "int8")
 
 
 def _wall(fn, *args, reps=3):
@@ -34,52 +63,196 @@ def _wall(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run():
-    import jax
+def _model_rows(lines):
+    """Structural overlap-aware rows per (shape x dtype)."""
     import jax.numpy as jnp
-    from repro.kernels import ref
-    from repro.kernels.ops import pick_blocks, plan_accounting, vmem_bytes
-
-    lines = []
-    rs = np.random.RandomState(0)
-    plain = jax.jit(lambda a, b: a @ b)
-    fused = jax.jit(lambda a, b: ref.abft_matmul_ref(a, b))
+    from repro.kernels.ops import (HBM_BW, pick_blocks, plan_accounting,
+                                   vmem_bytes)
     shapes = [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
               (384, 640, 896)]
+    bytes_of = {"float32": 4, "bfloat16": 2, "int8": 1}
     for (m, k, n) in shapes:
-        a = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
-        b = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
-        t_plain = _wall(plain, a, b)
-        t_fused = _wall(fused, a, b)
-        # structural kernel accounting (TPU target) on the planned tiling —
-        # plan_accounting is the same model pick_blocks scored the plan with
-        plan = pick_blocks(m, k, n, in_bytes=4, out_bytes=4, f=F)
-        acct = plan_accounting(plan, in_bytes=4, out_bytes=4, f=F)
-        t_compute = acct["flops"] / PEAK_FLOPS
-        t_memory = (acct["gemm_bytes"] + acct["cs_wr_bytes"]) / HBM_BW
-        vmem = vmem_bytes(plan.bm, plan.bn, plan.bk, in_bytes=4,
-                          out_bytes=4, f=F)
+        for dt in DTYPES:
+            ib = bytes_of[dt]
+            dtype = jnp.dtype(dt)
+            plan = pick_blocks(m, k, n, in_bytes=ib, f=F, in_dtype=dtype)
+            pipe = plan_accounting(plan, in_bytes=ib, f=F, in_dtype=dtype,
+                                   pipeline=True)
+            ser = plan_accounting(plan, in_bytes=ib, f=F, in_dtype=dtype,
+                                  pipeline=False)
+            vmem = vmem_bytes(plan.bm, plan.bn, plan.bk, in_bytes=ib, f=F)
+            lines.append((
+                f"kernel_abft_matmul/{m}x{k}x{n}/{dt}",
+                f"{pipe['t_total_s']*1e6:.1f}",
+                f"model_us_serial={ser['t_total_s']*1e6:.1f} "
+                f"exposed_frac_pipe={pipe['exposed_fraction']:.3f} "
+                f"exposed_frac_serial={ser['exposed_fraction']:.3f} "
+                f"epilogue_hidden_us="
+                f"{(ser['exposed_s']-pipe['exposed_s'])*1e6:.1f} "
+                f"extra_flops={100*pipe['cs_flops']/pipe['flops']:.3f}% "
+                f"mxu_rate_tflops={pipe['mxu_rate']/1e12:.0f} "
+                f"extra_hbm_rd_col={pipe['extra_hbm_rd_col']} "
+                f"extra_hbm_rd_row={pipe['extra_hbm_rd_row']} "
+                f"cs_wr_bytes={pipe['cs_wr_bytes']} "
+                f"saved_vs_unfused_bytes={pipe['unfused_extra_rd']} "
+                f"pad_waste={100*plan.waste:.2f}% "
+                f"vmem_kb={vmem//1024} "
+                f"blocks=({plan.bm},{plan.bn},{plan.bk})"))
+
+
+def _clean_sweep_rows(lines, rs):
+    """Layer-path ABFT GEMM, clean inputs: false alarms must be 0/dtype."""
+    import jax.numpy as jnp
+    from repro.core.abft_gemm import ABFTConfig, abft_matmul, encode_weight
+    sweep = [(8, 64, 96), (16, 128, 640), (32, 256, 256), (64, 512, 384)]
+    name_of = {"float32": "fp32", "bfloat16": "bf16", "int8": "int8"}
+    for dt in DTYPES:
+        cfg = ABFTConfig(mode="verify", f=F, in_dtype=name_of[dt])
+        alarms, t_sum = 0, 0.0
+        for (m, k, n) in sweep:
+            x = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+            w = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+            w_enc = encode_weight(w, cfg)
+            t0 = time.perf_counter()
+            _, ok = abft_matmul(x, w_enc, cfg)
+            t_sum += time.perf_counter() - t0
+            alarms += int(not bool(ok))
         lines.append((
-            f"kernel_abft_matmul/{m}x{k}x{n}",
-            f"{t_fused*1e6:.0f}",
-            f"cpu_overhead_vs_plain={100*t_fused/t_plain:.1f}% "
-            f"extra_hbm_rd_col={acct['extra_hbm_rd_col']} "
-            f"extra_hbm_rd_row={acct['extra_hbm_rd_row']} "
-            f"cs_wr_bytes={acct['cs_wr_bytes']} "
-            f"(cs_wr_pct={100*acct['cs_wr_bytes']/acct['gemm_bytes']:.3f}%) "
-            f"saved_vs_unfused_bytes={acct['unfused_extra_rd']} "
-            f"extra_flops={100*acct['cs_flops']/acct['flops']:.3f}% "
-            f"pad_waste={100*plan.waste:.2f}% "
-            f"tpu_roofline_us={max(t_compute,t_memory)*1e6:.1f} "
-            f"vmem_kb={vmem//1024} "
-            f"blocks=({plan.bm},{plan.bn},{plan.bk})"))
+            f"kernel_clean_sweep/{dt}",
+            f"{t_sum/len(sweep)*1e6:.0f}",
+            f"false_alarms={alarms} shapes={len(sweep)} "
+            f"(dtype-aware detection eps; must be 0 — CI gated)"))
+    return lines
+
+
+def _flip_drill_rows(lines, rs):
+    """Bit flip in carried accumulator data, per dtype: detect/locate/fix."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    m = k = n = 256
+    plan = ops.pick_blocks(m, k, n, f=F)
+    for dt in DTYPES:
+        if dt == "int8":
+            a1, a2 = (jnp.asarray(rs.randint(-4, 5, (m, k)), jnp.int8)
+                      for _ in range(2))
+            b1, b2 = (jnp.asarray(rs.randint(-4, 5, (k, n)), jnp.int8)
+                      for _ in range(2))
+            c0 = jnp.zeros((m, n), jnp.int32)
+            bit = 20
+        else:
+            cast = jnp.dtype(dt)
+            a1, a2 = (jnp.asarray(rs.standard_normal((m, k)), cast)
+                      for _ in range(2))
+            b1, b2 = (jnp.asarray(rs.standard_normal((k, n)), cast)
+                      for _ in range(2))
+            c0 = jnp.zeros((m, n), jnp.float32)
+            # bit 28 for fp32 (bit 30 can overflow the element to inf and
+            # NaN-poison the residual); bf16-path data is still fp32 C
+            bit = 28 if dt == "float32" else 30
+        st0 = ops.acc_state_zeros(plan, F)
+        c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
+                                         verify=False, backend="pallas")
+        bad = np.asarray(c1).copy()
+        view = bad.view(np.uint32)
+        view[7, 9] ^= np.uint32(1 << bit)
+        c_bad = jnp.asarray(bad)
+        c2, _, stats = ops.abft_matmul_acc(a2, b2, c_bad, st1, plan=plan,
+                                           verify=True, backend="pallas")
+        ref = np.asarray(a1, np.float64) @ np.asarray(b1, np.float64) \
+            + np.asarray(a2, np.float64) @ np.asarray(b2, np.float64)
+        err = float(np.max(np.abs(np.asarray(c2, np.float64) - ref)))
+        detected = bool(np.asarray(stats)[..., 0].sum() > 0)
+        corrected = err == 0.0 if dt == "int8" else err < 1e-3
+        lines.append((
+            f"kernel_flip_drill/{dt}",
+            "0",
+            f"detected={detected} located_and_corrected={corrected} "
+            f"max_err_after_repair={err:.2e} bit={bit} "
+            f"(masked re-computation from the carried plain-sum checksum"
+            f"{'; integer grid => bit-exact' if dt == 'int8' else ''})"))
+    return lines
+
+
+def _autotune_rows(lines):
+    """Measured autotuner vs cost model on an isolated throwaway cache."""
+    import jax.numpy as jnp
+    from repro.kernels import autotune as at
+    shapes = [(256, 256, 256), (256, 512, 384)]
+    dts = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+    with tempfile.TemporaryDirectory() as td:
+        old = os.environ.get(at.CACHE_ENV)
+        os.environ[at.CACHE_ENV] = os.path.join(td, "autotune.json")
+        try:
+            for (m, k, n) in shapes:
+                for name, dt in dts.items():
+                    plan, info = at.autotune(m, k, n, in_dtype=dt,
+                                             top_k=3, reps=1)
+                    mb = "x".join(str(b) for b in info["model_blocks"])
+                    wb = f"{plan.bm}x{plan.bn}x{plan.bk}"
+                    t_best = info["measured_us"][wb]
+                    t_model = info["measured_us"][mb]
+                    lines.append((
+                        f"kernel_autotune/{m}x{k}x{n}/{name}",
+                        f"{t_best:.0f}",
+                        f"model_plan_us={t_model:.0f} "
+                        f"beats_or_matches_model={t_best <= t_model} "
+                        f"winner_blocks={wb} model_blocks={mb} "
+                        f"candidates={len(info['measured_us'])} "
+                        f"persisted={info['persisted']} "
+                        f"(XLA-twin wall on CPU; Pallas kernel on TPU)"))
+        finally:
+            if old is None:
+                os.environ.pop(at.CACHE_ENV, None)
+            else:
+                os.environ[at.CACHE_ENV] = old
+    return lines
+
+
+def _serve_projection_rows(lines):
+    """Tokens/s projection: 256-token decode batch, 24-layer d=2048 MLP."""
+    import jax.numpy as jnp
+    from repro.kernels.ops import pick_blocks, plan_accounting
+    B, D, H, L = 256, 2048, 8192, 24
+    bytes_of = {"float32": 4, "bfloat16": 2, "int8": 1}
+    base = None
+    for dt in DTYPES:
+        ib = bytes_of[dt]
+        dtype = jnp.dtype(dt)
+        t_layer = 0.0
+        for (m, k, n) in [(B, D, H), (B, H, D)]:
+            plan = pick_blocks(m, k, n, in_bytes=ib, f=F, in_dtype=dtype)
+            t_layer += plan_accounting(plan, in_bytes=ib, f=F,
+                                       in_dtype=dtype,
+                                       pipeline=True)["t_total_s"]
+        toks = B / (L * t_layer)
+        base = base or toks
+        lines.append((
+            f"kernel_serve_projection/{dt}",
+            f"{L*t_layer*1e6:.0f}",
+            f"tokens_per_s={toks:,.0f} speedup_vs_fp32={toks/base:.2f}x "
+            f"(model: {L} layers x [{B}x{D}x{H} + {B}x{H}x{D}] ABFT-GEMM, "
+            f"pipelined grid, dtype-aware MXU rate)"))
+    return lines
+
+
+def run():
+    import jax.numpy as jnp
+    rs = np.random.RandomState(0)
+    lines = []
+    _model_rows(lines)
+    _clean_sweep_rows(lines, rs)
+    _flip_drill_rows(lines, rs)
+    _autotune_rows(lines)
+    _serve_projection_rows(lines)
 
     # -- checksummed flash attention: cost of the epilogue checksum ---------
     # The recurrence rides the existing p tile: two [bq,bk]@[bk,1] products
     # (V-column checksum + softmax rowsum) against the kernel's two
     # [bq,bk]@[bk,d] GEMMs — structurally ~1/d extra FLOPs and ZERO extra
-    # HBM reads (vc is reduced from the V tile already in VMEM).  CPU wall
-    # is interpret-mode and reported for the ratio only.
+    # HBM reads (vc is reduced from the V tile already in VMEM).  The
+    # pipelined (k_steps+1) grid moves the checksum/stats epilogue off the
+    # last recurrence step so it overlaps the next q-row's K/V fetch.  CPU
+    # wall is interpret-mode and reported for the ratio only.
     from repro.kernels.flash_attention import (flash_attention_checked,
                                                flash_attention_pallas)
     BH, S, D, bq, bk = 2, 512, 64, 128, 128
@@ -96,6 +269,7 @@ def run():
         f"checksum_overhead={struct_pct:.2f}% (structural: extra flops "
         f"of the two [bq,bk]@[bk,1] epilogue products, target <10%) "
         f"extra_hbm_rd=0 (checksums off the VMEM acc) "
+        f"pipelined_grid=k_steps+1 (epilogue overlaps next K/V fetch) "
         f"stats_wr_bytes={BH*(S//bq)*2*4} "
         f"interpret_wall_ratio={t_chk/t_plain:.2f}x "
         f"(CPU interpreter, not representative of the TPU epilogue)"))

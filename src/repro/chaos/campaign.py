@@ -344,6 +344,9 @@ class CampaignRunner:
             return self._run_serve(spec)
         if spec.workload == "traffic":
             return self._run_traffic(spec)
+        if spec.kind == "sdc_collective" and \
+                spec.surface == "kernels.ops/acc_state":
+            return self._run_kernel_data_flip(spec)
         if spec.kind == "checksum_state_flip":
             return self._run_kernel_state_flip(spec)
         if spec.kind == "flash_state_flip":
@@ -762,6 +765,35 @@ class CampaignRunner:
 
     # -- kernel surface (train protection stack) ------------------------------
 
+    def _kernel_drill_operands(self, spec: FaultSpec, rng, m, k, n):
+        """(a1, a2, b1, b2, c0, out_dtype, tag) for the kernel-surface
+        drills, honoring the spec's dtype variant ("" = fp32, "bf16",
+        "int8").  int8 feeds the int32-accumulator wire (small ints keep
+        the fp32 checksums of the carried state exact -> bit-exact
+        promises); bf16 feeds the native bf16 MXU dot with fp32 checksum
+        accumulation and the widened detection eps (kernels.ops
+        detection_eps)."""
+        tag = spec.variant or "fp32"
+        if tag == "int8":
+            mk = lambda sh: jnp.asarray(rng.randint(-4, 5, size=sh), jnp.int8)
+            a1, a2, b1, b2 = mk((m, k)), mk((m, k)), mk((k, n)), mk((k, n))
+            return a1, a2, b1, b2, jnp.zeros((m, n), jnp.int32), \
+                jnp.int32, tag
+        dt = jnp.bfloat16 if tag == "bf16" else jnp.float32
+        mk = lambda sh: jnp.asarray(rng.standard_normal(sh), dt)
+        a1, a2, b1, b2 = mk((m, k)), mk((m, k)), mk((k, n)), mk((k, n))
+        return a1, a2, b1, b2, jnp.zeros((m, n), jnp.float32), \
+            jnp.float32, tag
+
+    def _dtype_surface(self, spec: FaultSpec, result: FaultResult):
+        """Suffix the RESULT surface with the dtype variant so the
+        coverage matrix gains the dtype dimension for this surface, while
+        spec.surface stays registry-valid for replay/classification."""
+        if spec.variant in ("bf16", "int8"):
+            return dataclasses.replace(
+                result, surface=f"{spec.surface}[{spec.variant}]")
+        return result
+
     def _run_kernel_state_flip(self, spec: FaultSpec) -> FaultResult:
         """Bit flip in the accumulate kernel's CARRIED CHECKSUM STATE
         between two chained calls.  The next call's verify prologue must
@@ -769,7 +801,9 @@ class CampaignRunner:
         residual family trips, and rewriting data off a corrupted checksum
         would corrupt healthy values.  Drilled through the XLA twin of the
         kernel prologue off-TPU (bit-for-bit the same semantics; see
-        kernels.ops.abft_matmul_acc)."""
+        kernels.ops.abft_matmul_acc).  variant="bf16"/"int8" drills the
+        mixed-precision operand paths: the carried checksum state is fp32
+        for every dtype, so the promise is dtype-independent."""
         from repro.kernels import ops
 
         rng = np.random.RandomState(spec.seed)
@@ -778,17 +812,15 @@ class CampaignRunner:
         plan = ops.pick_blocks(m, k, n, carry=True, require_exact=True,
                                vmem_budget=2 * 2 ** 20)
         assert plan is not None
-        a1, a2 = (jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-                  for _ in range(2))
-        b1, b2 = (jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
-                  for _ in range(2))
-        c0 = jnp.zeros((m, n), jnp.float32)
+        a1, a2, b1, b2, c0, out_dtype, tag = \
+            self._kernel_drill_operands(spec, rng, m, k, n)
         st0 = ops.acc_state_zeros(plan)
         # golden chain
         c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
-                                         backend="jnp")
+                                         backend="jnp", out_dtype=out_dtype)
         c2, _, s_clean = ops.abft_matmul_acc(a2, b2, c1, st1, plan=plan,
-                                             backend="jnp")
+                                             backend="jnp",
+                                             out_dtype=out_dtype)
         # fault chain: flip one bit of the plain-sum column checksum row
         ccol, crow = st1
         idx = int(rng.randint(ccol[:, 0, :].size))
@@ -796,17 +828,65 @@ class CampaignRunner:
         flat = np.ravel_multi_index((t_i, 0, col), ccol.shape)
         ccol_bad = flip_bit(ccol, int(flat), bit=spec.bit)
         c2f, _, stats = ops.abft_matmul_acc(a2, b2, c1, (ccol_bad, crow),
-                                            plan=plan, backend="jnp")
+                                            plan=plan, backend="jnp",
+                                            out_dtype=out_dtype)
         detected = bool(np.asarray(stats[..., 0]).any())
         repaired = bool(np.asarray(stats[..., 1]).any())
         end_state, diff = _compare_trees(_host(c2f), _host(c2), 0.0)
-        return self._result(
+        return self._dtype_surface(spec, self._result(
             spec, detected=detected, corrected=repaired, rung=None,
             latency=None, end_state=end_state, max_abs_diff=diff,
-            note=f"flip in carried ccol tile {t_i} col {col}: one residual "
-                 f"family trips -> detect-only by design (repair gate needs "
-                 f"both); data must pass through untouched "
-                 f"(repaired={repaired})")
+            note=f"[{tag}] flip in carried ccol tile {t_i} col {col}: one "
+                 f"residual family trips -> detect-only by design (repair "
+                 f"gate needs both); data must pass through untouched "
+                 f"(repaired={repaired})"))
+
+    def _run_kernel_data_flip(self, spec: FaultSpec) -> FaultResult:
+        """SDC in the accumulate kernel's CARRIED DATA between two chained
+        calls (sdc_collective aimed at the kernels.ops/acc_state surface).
+        Both residual families trip in the next call's verify prologue, so
+        the concentration-gated repair must locate the element and rewrite
+        it from the carried plain-sum checksum — bit-exact on the int8
+        wire (int32 data, exact fp32 checksums), within detection_eps
+        tolerance on the float paths."""
+        from repro.kernels import ops
+
+        rng = np.random.RandomState(spec.seed)
+        m = n = 256
+        k = 256
+        plan = ops.pick_blocks(m, k, n, carry=True, require_exact=True,
+                               vmem_budget=2 * 2 ** 20)
+        assert plan is not None
+        a1, a2, b1, b2, c0, out_dtype, tag = \
+            self._kernel_drill_operands(spec, rng, m, k, n)
+        st0 = ops.acc_state_zeros(plan)
+        c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
+                                         backend="jnp", out_dtype=out_dtype)
+        c2, _, _ = ops.abft_matmul_acc(a2, b2, c1, st1, plan=plan,
+                                       backend="jnp", out_dtype=out_dtype)
+        # flip one bit of one carried data element between the calls
+        r_i = int(rng.randint(m))
+        c_i = int(rng.randint(n))
+        flat = int(np.ravel_multi_index((r_i, c_i), (m, n)))
+        c1_bad = flip_bit(c1, flat, bit=spec.bit)
+        t0 = time.perf_counter()
+        c2f, _, stats = ops.abft_matmul_acc(a2, b2, c1_bad, st1, plan=plan,
+                                            backend="jnp",
+                                            out_dtype=out_dtype)
+        wall = time.perf_counter() - t0
+        detected = bool(np.asarray(stats[..., 0]).any())
+        repaired = bool(np.asarray(stats[..., 1]).any())
+        tol = 0.0 if tag == "int8" else self.train.tol
+        end_state, diff = _compare_trees(_host(c2f), _host(c2), tol)
+        return self._dtype_surface(spec, self._result(
+            spec, detected=detected, corrected=repaired,
+            rung="kernel:masked_recompute" if repaired else None,
+            latency=wall if repaired else None,
+            end_state=end_state, max_abs_diff=diff,
+            note=f"[{tag}] bit {spec.bit} flip in carried data ({r_i},"
+                 f"{c_i}): both residual families trip -> located and "
+                 f"repaired from the plain-sum checksum "
+                 f"(end_state={end_state})"))
 
     def _run_flash_state_flip(self, spec: FaultSpec) -> FaultResult:
         """Flip-sized delta into the flash kernel's VMEM scratch (the

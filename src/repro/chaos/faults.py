@@ -478,6 +478,15 @@ class FaultSpace:
                       shard=0, delta=1e4),
             FaultSpec(kind="checksum_state_flip", workload="train", step=1,
                       bit=30),
+            # mixed-precision kernel wires (PR 9): the same carried-state
+            # promises must hold when the operand stream narrows — bf16
+            # state flip stays detect-only, and an SDC in the int8 wire's
+            # carried int32 data is located and repaired bit-exactly
+            FaultSpec(kind="checksum_state_flip", workload="train", step=1,
+                      bit=30, variant="bf16", seed=1),
+            FaultSpec(kind="sdc_collective", workload="train", step=1,
+                      bit=20, variant="int8",
+                      surface="kernels.ops/acc_state"),
             FaultSpec(kind="flash_state_flip", workload="train", step=1),
             FaultSpec(kind="norm_corruption", workload="train", step=2),
             FaultSpec(kind="gather_corruption", workload="train", step=2),
@@ -539,6 +548,14 @@ class FaultSpace:
             FaultSpec(kind="dram_params", workload="serve", step=0, bit=30),
             FaultSpec(kind="flash_state_flip", workload="train", step=2,
                       variant="l", seed=1),
+            # remaining dtype cells of the kernel carried-state matrix
+            FaultSpec(kind="checksum_state_flip", workload="train", step=2,
+                      bit=29, variant="int8", seed=2),
+            FaultSpec(kind="sdc_collective", workload="train", step=2,
+                      bit=30, variant="bf16", seed=2,
+                      surface="kernels.ops/acc_state"),
+            FaultSpec(kind="sdc_collective", workload="train", step=2,
+                      bit=28, seed=3, surface="kernels.ops/acc_state"),
             FaultSpec(kind="shard_loss", workload="train", step=3, shard=1,
                       seed=1),
             FaultSpec(kind="pod_loss", workload="train", step=3,
@@ -739,18 +756,22 @@ class FaultSpace:
 
 
 def flip_bit(x, flat_index: int, bit: int = 30):
-    """XOR one bit of a float32 array element — the literal fault model.
+    """XOR one bit of a float32/int32 array element — the literal fault
+    model.
 
-    Used by drills to produce realistic corruption magnitudes; `bit` 30 is
-    the top exponent bit (catastrophic), ~23-29 exponent, <23 mantissa.
+    Used by drills to produce realistic corruption magnitudes; on fp32,
+    `bit` 30 is the top exponent bit (catastrophic), ~23-29 exponent,
+    <23 mantissa.  int32 covers the int8 kernel wire's accumulator, where
+    bit b is a clean additive ±2^b.
     """
     x = jnp.asarray(x)
-    assert x.dtype == jnp.float32, "bit-flip model is defined on float32"
+    assert x.dtype in (jnp.float32, jnp.int32), \
+        "bit-flip model is defined on 32-bit words"
     flat = x.reshape(-1)
     word = jax.lax.bitcast_convert_type(flat[flat_index], jnp.uint32)
     word = word ^ jnp.uint32(1 << bit)
     return flat.at[flat_index].set(
-        jax.lax.bitcast_convert_type(word, jnp.float32)).reshape(x.shape)
+        jax.lax.bitcast_convert_type(word, x.dtype)).reshape(x.shape)
 
 
 def scatter_delta(extent: int, shard, delta) -> jax.Array:

@@ -46,6 +46,16 @@ __all__ = ["ABFTConfig", "encode_weight", "abft_matmul", "verify_output",
            "correct_output"]
 
 
+# Kernel compute dtypes the layer path accepts.  Checksum ACCUMULATION is
+# always fp32 (int8 products route through an int32 GEMM first) — only the
+# A/B operand stream narrows, which is what buys MXU rate.
+_KERNEL_DTYPES = {
+    "fp32": jnp.float32, "float32": jnp.float32,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    "int8": jnp.int8,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class ABFTConfig:
     mode: str = "off"          # off | checksum | verify | correct
@@ -53,10 +63,37 @@ class ABFTConfig:
     tol_factor: float = 256.0  # residual threshold multiplier
     seed: int = 17
     backend: str = "auto"      # auto | pallas | ref (fused-kernel dispatch)
+    in_dtype: str = "fp32"     # fp32 | bf16 | int8 — GEMM operand dtype
 
     @property
     def active(self) -> bool:
         return self.mode != "off"
+
+    @property
+    def compute_dtype(self):
+        try:
+            return _KERNEL_DTYPES[self.in_dtype]
+        except KeyError:
+            raise ValueError(
+                f"in_dtype={self.in_dtype!r} not in {sorted(_KERNEL_DTYPES)}"
+            ) from None
+
+
+def _detection_eps(cfg: "ABFTConfig") -> float:
+    """Residual-test eps for the configured operand dtype.
+
+    fp32 keys on fp32 eps (unchanged).  bf16 operands quantize the encoded
+    checksum COLUMNS of ``w_enc`` to bf16, so the clean residual floor is
+    ~eps_bf16 * sqrt(n) * |Y| — eps must widen to bf16 or every clean bf16
+    matmul false-alarms.  int8 rides the dynamic-quantization path whose
+    checksum sums stay fp32-exact-ish (integer products < 2^24 per term),
+    so fp32 eps keeps detection sharp.
+    """
+    dt = cfg.compute_dtype
+    eps32 = float(jnp.finfo(jnp.float32).eps)
+    if jnp.issubdtype(dt, jnp.floating):
+        return max(float(jnp.finfo(dt).eps), eps32)
+    return eps32
 
 
 def _weights(n: int, f: int, seed: int, dtype) -> jax.Array:
@@ -81,6 +118,7 @@ def _fused_forward(x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig):
     verify einsum, no extra HBM read of Y.
     """
     from repro.kernels import ops as kops  # lazy: avoids core<->kernels cycle
+    from repro.kernels import autotune as ktune
 
     force = cfg.backend == "pallas"
     if not (force or (cfg.backend == "auto" and kops.on_tpu())):
@@ -92,8 +130,8 @@ def _fused_forward(x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig):
         m *= d
     n_enc = w_enc.shape[-1]
     n = n_enc - cfg.f
-    plan = kops.pick_blocks(m, k, n_enc, in_bytes=x.dtype.itemsize,
-                            out_bytes=4, f=cfg.f)
+    plan = ktune.best_plan(m, k, n_enc, in_dtype=x.dtype,
+                           out_dtype=jnp.float32, f=cfg.f)
     if plan is None or (not force and plan.waste > 0.25):
         return None
     wr = _weights(n, cfg.f, cfg.seed, jnp.float32)             # [n, f]
@@ -107,6 +145,36 @@ def _fused_forward(x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig):
     return y_f.reshape(*lead, n_enc), res.reshape(*lead, cfg.f)
 
 
+def _int8_forward(x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig):
+    """Dynamically-quantized int8 forward: (y_f fp32, residual fp32).
+
+    Checksum columns of magnitude ~sqrt(n)*127*|w_q| cannot live in int8,
+    so the int8 path splits the encoded matrix: the DATA block is
+    quantized to int8 and multiplied on the int8 MXU wire (int32
+    accumulate, composing with the ``ef_psum_tree`` int8 collective), while
+    the checksum product re-encodes in fp32 from the *quantized* weights —
+    cs_q = w_q @ w_r, y_cs = x_q @ cs_q — a different association order
+    than (x_q @ w_q) @ w_r, so a fault in the main GEMM still breaks the
+    consistency relation.  Integer products stay below 2^24 per term, so
+    both sides are fp32-exact-ish and detection keeps fp32 eps.
+    """
+    n = w_enc.shape[-1] - cfg.f
+    w = w_enc[..., :n].astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    sx = 127.0 / (jnp.max(jnp.abs(x32)) + 1e-30)
+    sw = 127.0 / (jnp.max(jnp.abs(w)) + 1e-30)
+    xq = jnp.clip(jnp.round(x32 * sx), -127, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w * sw), -127, 127).astype(jnp.int8)
+    yq = jnp.dot(xq, wq, preferred_element_type=jnp.int32).astype(jnp.float32)
+    wr = _weights(n, cfg.f, cfg.seed, jnp.float32)          # [n, f]
+    cs_q = wq.astype(jnp.float32) @ wr                      # [k, f]
+    ycs_q = xq.astype(jnp.float32) @ cs_q                   # [..., f]
+    residual_q = yq @ wr - ycs_q
+    inv = 1.0 / (sx * sw)
+    y_f = jnp.concatenate([yq, ycs_q], axis=-1) * inv
+    return y_f, residual_q * inv
+
+
 def abft_matmul(
     x: jax.Array, w_enc: jax.Array, cfg: ABFTConfig,
 ) -> Tuple[jax.Array, Optional[jax.Array]]:
@@ -114,15 +182,24 @@ def abft_matmul(
 
     w_enc must be `encode_weight(w, cfg)` when cfg.active, else plain w.
     Returns (y, ok) where ok is None unless mode in {verify, correct}.
+    cfg.in_dtype narrows the GEMM operand stream (bf16 casts both
+    operands, int8 dynamically quantizes); checksums stay fp32 throughout
+    and the residual test widens eps to match (`_detection_eps`).
     """
     if not cfg.active:
         return jnp.dot(x, w_enc, preferred_element_type=jnp.float32).astype(x.dtype), None
-    fused = _fused_forward(x, w_enc, cfg)
-    if fused is None:
-        y_f = jnp.dot(x, w_enc, preferred_element_type=jnp.float32)
-        residual = None
+    if cfg.in_dtype == "int8":
+        y_f, residual = _int8_forward(x, w_enc, cfg)
     else:
-        y_f, residual = fused
+        cdt = cfg.compute_dtype
+        x_c = x.astype(cdt) if x.dtype != cdt else x
+        w_c = w_enc.astype(cdt) if w_enc.dtype != cdt else w_enc
+        fused = _fused_forward(x_c, w_c, cfg)
+        if fused is None:
+            y_f = jnp.dot(x_c, w_c, preferred_element_type=jnp.float32)
+            residual = None
+        else:
+            y_f, residual = fused
     y, y_cs = y_f[..., : -cfg.f], y_f[..., -cfg.f :]
     if cfg.mode == "checksum":
         return y.astype(x.dtype), None
@@ -137,10 +214,15 @@ def abft_matmul(
 
 
 def _residual_ok(y: jax.Array, residual: jax.Array, cfg: ABFTConfig):
-    """The §4.3 acceptance test: max |residual| <= tol * n * eps * |Y|."""
+    """The §4.3 acceptance test: max |residual| <= tol * n * eps * |Y|.
+
+    eps keys on the configured OPERAND dtype (`_detection_eps`), not on
+    y.dtype — y is always the fp32 accumulator on the fused path, so the
+    old y.dtype check silently kept fp32 eps for bf16 operands and every
+    clean bf16 matmul tripped the detector on checksum-quantization noise.
+    """
     n = y.shape[-1]
-    eps = jnp.finfo(jnp.float32).eps if y.dtype in (jnp.float32, jnp.float64) \
-        else float(jnp.finfo(jnp.bfloat16).eps)
+    eps = _detection_eps(cfg)
     # mean-|.| scale: robust to a single corrupted element (see core.detect)
     scale = jnp.mean(jnp.abs(y.astype(jnp.float32))) + 1e-30
     tol = cfg.tol_factor * n * eps * scale
@@ -184,8 +266,12 @@ def correct_output(y, y_cs, residual, cfg: ABFTConfig):
     flat_cs = y_cs.reshape(-1, cfg.f).astype(jnp.float32)
     res_r = fixed[r] @ wr - flat_cs[r]
     fixed = fixed.at[r, col].add(-res_r[0] / wr[col, 0])
-    eps = float(jnp.finfo(jnp.float32).eps)
-    scale = jnp.max(jnp.abs(y32)) + 1e-30
+    eps = _detection_eps(cfg)  # dtype-aware: bf16 checksum-quantization
+    # noise must not trip a phantom "repair" of a healthy element.
+    # mean-|.| scale (as in _residual_ok): a max-|.| scale is inflated by
+    # the corrupted element itself, which with the wider bf16 eps pushed
+    # the threshold above genuine flip residuals
+    scale = jnp.mean(jnp.abs(y32)) + 1e-30
     tol = cfg.tol_factor * n * eps * scale
     use_fixed = jnp.max(jnp.abs(flat_res)) > tol
     out = jnp.where(use_fixed, fixed, flat_y)

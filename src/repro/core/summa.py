@@ -356,8 +356,11 @@ def _resolve_local_update(local_update: str, mb: int, kb: int, nb: int):
     # require_exact: the carried checksum state lives across the whole SUMMA
     # loop, and padding every step would churn copies — search only tilings
     # that divide the local blocks (the cost model may otherwise prefer a
-    # padded plan for its fewer HBM re-streams).
-    plan = kops.pick_blocks(mb, kb, nb, carry=True, require_exact=True)
+    # padded plan for its fewer HBM re-streams).  best_plan resolves a
+    # measured winner (env override / warmed cache) when one exists and
+    # falls back to the pure cost model — it never measures inline.
+    from repro.kernels import autotune as ktune
+    plan = ktune.best_plan(mb, kb, nb, carry=True, require_exact=True)
     if local_update == "pallas":
         if plan is None:
             raise ValueError(

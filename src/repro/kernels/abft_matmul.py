@@ -31,13 +31,37 @@ Two entry points:
     update of ``core.summa._local_summa``: every SUMMA step's checksum
     maintenance and SDC scrub ride the MXU pass instead of separate einsums.
 
-Grid: (m/bm, n/bn, k/bk), k innermost (same C tile revisited across k; the
-fp32 accumulator lives in VMEM scratch).  On the last k step the tile is cast
-to the output dtype and both checksum partials are computed FROM THE ROUNDED
-tile, so a clean carried state verifies bit-exactly on the next accumulate
-call for any storage dtype.  Each output block is visited by a single
-contiguous run of grid steps (no non-monotonic revisits — safe under TPU
-pipelining).
+Grid: (m/bm, n/bn, k-steps), k innermost (same C tile revisited across k;
+the accumulator lives in VMEM scratch — fp32, or int32 for int8 inputs).
+On the last k step the tile is cast to the output dtype and both checksum
+partials are computed FROM THE ROUNDED tile, so a clean carried state
+verifies bit-exactly on the next accumulate call for any storage dtype.
+Each output block is visited by a single contiguous run of grid steps (no
+non-monotonic revisits — safe under TPU pipelining).
+
+Pipelined grid (``pipeline=True``, the default): the dual-checksum epilogue
+— and, in the accumulate variant, the verify/correct prologue — get their
+OWN grid steps instead of sharing one with an MXU dot.  The one-shot grid
+becomes (mt, nt, ks+1) with a dot-free epilogue step at kk == ks; the
+accumulate grid becomes (mt, nt, ks+2) with a dot-free prologue step at
+kk == 0 and the epilogue at kk == ks+1.  The A/B index maps clamp the
+k-block (``min``/``clip``), so the extra steps re-reference the block
+already resident in VMEM — Pallas skips the DMA for an unchanged block
+index and instead prefetches the NEXT (i, j) tile's A/B (and C_in) streams
+while the VPU runs the checksum reductions.  That is the double-buffered
+overlap the GPU online-FT GEMM literature gets from an explicit epilogue
+pipeline stage: the checksum work hides under the adjacent tile's operand
+fetch rather than extending the MXU steps.  ``pipeline=False`` keeps the
+serial fused layout (epilogue/prologue sharing dot steps) for A/B bench
+comparison.
+
+Mixed precision: A/B may be fp32, bf16 or int8.  Float inputs feed the MXU
+at their native width (``preferred_element_type=float32`` keeps the
+accumulator fp32); int8 inputs accumulate exactly in an int32 scratch.
+Checksums are ALWAYS fp32, taken of the rounded stored tile — exact for
+integer data below 2^24, so the int8 path detects, locates and repairs
+bit-exactly.  ``eps_c`` (detection epsilon) is dtype-aware and supplied by
+the ``kernels.ops`` dispatcher via ``detection_eps(storage dtype)``.
 
 Block shapes are MXU-aligned (multiples of 128); ragged shapes are padded by
 the ``kernels.ops`` dispatcher (zero rows/cols checksum to zero, so padding
@@ -149,7 +173,7 @@ def _verify_correct(cin, wm, wn, ccol_c, crow_c, *, tol_factor, eps_c, bm, bn,
     return fixed, stats
 
 
-def _kernel(*refs, k_steps, carry_in, verify, tol_factor):
+def _kernel(*refs, k_steps, carry_in, verify, tol_factor, eps_c, pipeline):
     if carry_in:
         (a_ref, b_ref, wm_ref, wn_ref, cin_ref, ccin_ref, crin_ref,
          c_ref, ccol_ref, crow_ref, stats_ref, acc_ref) = refs
@@ -160,6 +184,19 @@ def _kernel(*refs, k_steps, carry_in, verify, tol_factor):
     j = pl.program_id(1)
     k = pl.program_id(2)
     bm, bn = acc_ref.shape
+    int_acc = jnp.issubdtype(acc_ref.dtype, jnp.integer)
+    # pipelined layout: dot-free prologue step (accumulate variant) and
+    # dot-free epilogue step; serial layout: dots on every step, epilogue
+    # sharing the last one (the pre-pipeline fused form)
+    dot_lo = 1 if (pipeline and carry_in) else 0
+    dot_hi = dot_lo + k_steps - 1
+    epi_step = dot_hi + 1 if pipeline else dot_hi
+
+    def _to_acc(x32):
+        # float accumulators hold fp32; the int8 path's int32 accumulator
+        # stores rounded integers (true values are integral, so this is
+        # exact below 2^24)
+        return jnp.round(x32).astype(acc_ref.dtype) if int_acc else x32
 
     @pl.when(k == 0)
     def _prologue():
@@ -172,25 +209,27 @@ def _kernel(*refs, k_steps, carry_in, verify, tol_factor):
                 cin, wm_ref[...].astype(jnp.float32),
                 wn_ref[...].astype(jnp.float32),
                 ccin_ref[0], crin_ref[0],
-                tol_factor=tol_factor,
-                eps_c=float(jnp.finfo(jnp.float32).eps),
+                tol_factor=tol_factor, eps_c=eps_c,
                 bm=bm, bn=bn, i=i, j=j,
             )
             stats_ref[...] = stats.reshape(1, 1, STATS_WIDTH)
-            acc_ref[...] = fixed
+            acc_ref[...] = _to_acc(fixed)
         else:
             # -1 location sentinels (slots 2:4), matching the verified path
             sw = lax.broadcasted_iota(jnp.int32, (1, 1, STATS_WIDTH), 2)
             stats_ref[...] = jnp.where((sw == 2) | (sw == 3), -1.0, 0.0)
-            acc_ref[...] = cin
+            acc_ref[...] = _to_acc(cin)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...].astype(jnp.float32),
-        b_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    @pl.when((k >= dot_lo) & (k <= dot_hi))
+    def _dot():
+        # native-width MXU feed: bf16 inputs take the bf16 MXU path with an
+        # fp32 accumulator; int8 inputs accumulate exactly in int32; fp32
+        # is the multi-pass emulation as before
+        acc_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...],
+            preferred_element_type=acc_ref.dtype)
 
-    @pl.when(k == k_steps - 1)
+    @pl.when(k == epi_step)
     def _epilogue():
         acc = acc_ref[...]
         c_ref[...] = acc.astype(c_ref.dtype)
@@ -204,10 +243,23 @@ def _kernel(*refs, k_steps, carry_in, verify, tol_factor):
         crow_ref[...] = crow[None]
 
 
-def _common_specs(bm, bn, bk, f):
+def _common_specs(bm, bn, bk, f, k_steps, *, pipeline, carry_in):
+    # k-block selection: the serial grid walks blocks directly; the
+    # pipelined grid clamps so the extra prologue/epilogue steps re-
+    # reference the resident block (no DMA) while Pallas prefetches the
+    # next (i, j) tile's streams under the VPU checksum work
+    if not pipeline:
+        def kblk(kk):
+            return kk
+    elif carry_in:
+        def kblk(kk):
+            return jnp.clip(kk - 1, 0, k_steps - 1)
+    else:
+        def kblk(kk):
+            return jnp.minimum(kk, k_steps - 1)
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # A
-        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # B
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kblk(kk))),   # A
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kblk(kk), j)),   # B
         pl.BlockSpec((f, bm), lambda i, j, kk: (0, i)),     # W_m
         pl.BlockSpec((bn, f), lambda i, j, kk: (j, 0)),     # W_n
     ]
@@ -219,8 +271,16 @@ def _common_specs(bm, bn, bk, f):
     return in_specs, out_specs
 
 
+def _acc_dtype(in_dtype):
+    """Accumulator dtype for given A/B inputs: int32 for integer (exact),
+    fp32 otherwise (bf16 inputs keep an fp32 accumulator)."""
+    return jnp.int32 if jnp.issubdtype(jnp.dtype(in_dtype), jnp.integer) \
+        else jnp.float32
+
+
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype",
+                              "pipeline")
 )
 def abft_matmul_pallas(
     a: jax.Array,
@@ -233,11 +293,15 @@ def abft_matmul_pallas(
     bk: int = 512,
     out_dtype=None,
     interpret: bool = False,
+    pipeline: bool = True,
 ):
     """One-shot C = A @ B with fused dual (row + column) checksums.
 
-    a: [m, k], b: [k, n], wm: [f, m], wn: [n, f];
+    a: [m, k], b: [k, n] — fp32, bf16 or int8 (int8 accumulates exactly in
+    int32; pass an integer ``out_dtype``); wm: [f, m], wn: [n, f];
     m % bm == k % bk == n % bn == 0 (``kernels.ops`` pads ragged shapes).
+    ``pipeline`` gives the checksum epilogue its own grid step so it
+    overlaps the next tile's A/B fetch (see module docstring).
     Returns (c: [m, n], ccol: [m/bm, f, n] fp32, crow: [n/bn, m, f] fp32) —
     per-tile checksum partials; summing over axis 0 gives the full W_m @ C
     and C @ W_n (each partial reduction is checksum-sized, negligible next
@@ -251,13 +315,17 @@ def abft_matmul_pallas(
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
         f"shape ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
     )
-    out_dtype = out_dtype or a.dtype
+    acc_dtype = _acc_dtype(a.dtype)
+    out_dtype = out_dtype or (jnp.int32 if acc_dtype == jnp.int32
+                              else a.dtype)
     k_steps = k // bk
-    grid = (m // bm, n // bn, k_steps)
+    grid = (m // bm, n // bn, k_steps + (1 if pipeline else 0))
     kernel = functools.partial(
         _kernel, k_steps=k_steps, carry_in=False, verify=False,
-        tol_factor=0.0)
-    in_specs, out_specs = _common_specs(bm, bn, bk, f)
+        tol_factor=0.0, eps_c=float(jnp.finfo(jnp.float32).eps),
+        pipeline=pipeline)
+    in_specs, out_specs = _common_specs(bm, bn, bk, f, k_steps,
+                                        pipeline=pipeline, carry_in=False)
     c, ccol, crow = pl.pallas_call(
         kernel,
         grid=grid,
@@ -268,7 +336,7 @@ def abft_matmul_pallas(
             jax.ShapeDtypeStruct((m // bm, f, n), jnp.float32),
             jax.ShapeDtypeStruct((n // bn, m, f), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(a, b, wm, wn)
     return c, ccol, crow
@@ -277,7 +345,7 @@ def abft_matmul_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=("bm", "bn", "bk", "verify", "tol_factor", "interpret",
-                     "out_dtype"),
+                     "out_dtype", "eps_c", "pipeline"),
 )
 def abft_matmul_acc_pallas(
     a: jax.Array,
@@ -295,6 +363,8 @@ def abft_matmul_acc_pallas(
     tol_factor: float = 64.0,
     out_dtype=None,
     interpret: bool = False,
+    eps_c=None,
+    pipeline: bool = True,
 ):
     """Accumulate step C_out = C_in + A @ B with carried checksum state.
 
@@ -303,6 +373,11 @@ def abft_matmul_acc_pallas(
     call with the same blocks (zeros for C_in = 0).  When ``verify``, each
     C_in tile is checked against the carried state at the first k-step and a
     single corrupted element is repaired in-VMEM before accumulation.
+    A/B may be fp32, bf16 or int8 (int32 accumulator, integer C).  ``eps_c``
+    is the dtype-aware detection epsilon for the verify tolerance (defaults
+    to fp32 eps; ``kernels.ops`` passes ``detection_eps(c_in.dtype)``).
+    ``pipeline`` gives the verify prologue and the checksum epilogue their
+    own dot-free grid steps (see module docstring).
     Returns (c_out, ccol_out, crow_out, stats: [m/bm, n/bn, STATS_WIDTH]).
     """
     m, k = a.shape
@@ -314,13 +389,16 @@ def abft_matmul_acc_pallas(
     )
     assert ccol_in.shape == (m // bm, f, n), ccol_in.shape
     assert crow_in.shape == (n // bn, m, f), crow_in.shape
+    acc_dtype = _acc_dtype(a.dtype)
     out_dtype = out_dtype or c_in.dtype
+    eps_c = float(jnp.finfo(jnp.float32).eps) if eps_c is None else eps_c
     k_steps = k // bk
-    grid = (m // bm, n // bn, k_steps)
+    grid = (m // bm, n // bn, k_steps + (2 if pipeline else 0))
     kernel = functools.partial(
         _kernel, k_steps=k_steps, carry_in=True, verify=verify,
-        tol_factor=tol_factor)
-    in_specs, out_specs = _common_specs(bm, bn, bk, f)
+        tol_factor=tol_factor, eps_c=eps_c, pipeline=pipeline)
+    in_specs, out_specs = _common_specs(bm, bn, bk, f, k_steps,
+                                        pipeline=pipeline, carry_in=True)
     in_specs = in_specs + [
         pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),       # C_in
         pl.BlockSpec((1, f, bn), lambda i, j, kk: (i, 0, j)),  # carried col
@@ -341,7 +419,7 @@ def abft_matmul_acc_pallas(
             jax.ShapeDtypeStruct((m // bm, n // bn, STATS_WIDTH),
                                  jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(a, b, wm, wn, c_in, ccol_in, crow_in)
     return c, ccol, crow, stats

@@ -1,0 +1,349 @@
+"""Measured autotuner over the fused ABFT-GEMM tiling plans.
+
+``ops.pick_blocks`` is a pure cost model: an overlap-aware time estimate
+(``max(t_hbm, t_mxu) + exposed_epilogue``) over candidate MXU-aligned
+tilings.  Models drift from silicon — this module closes the loop by
+MEASURING the top-K model-ranked candidates once per
+(m, k, n, in_dtype, out_dtype, f, carry, backend/device-kind) key and
+persisting the winner, so every later dispatch gets the measured plan for
+free.
+
+Layered resolution (highest wins), all read-only at dispatch time:
+
+    built-in defaults  <  on-disk JSON cache  <  REPRO_AUTOTUNE_PLAN env
+
+* ``best_plan`` is the dispatch-side lookup: it NEVER measures; on a cold
+  cache it falls back to the pure cost model (``pick_blocks``), so a
+  fresh checkout behaves exactly like the pre-autotune planner.
+* ``autotune`` is the measuring entry: rank candidates with the cost
+  model, wall-time the top-K (the cost-model choice is always candidate
+  #0, so the measured winner beats-or-matches the model by construction),
+  persist the winner.  ``launch/autotune.py`` pre-warms the cache for the
+  bench-suite and serving-bucket shapes.
+* A corrupt, truncated or unwritable cache file degrades to the cost
+  model with a warning — never a crash.
+
+Measurement honesty off-TPU: the one-shot dispatcher's CPU fallback is a
+plain XLA reference that ignores the plan, and interpret-mode Pallas walls
+measure the interpreter, not the kernel.  So measurements run the
+accumulate family — the Pallas kernel on TPU, its XLA twin (whose
+verify/checksum einsums batch over the plan's tile grid, i.e. genuinely
+plan-sensitive) on CPU.
+
+Env knobs:
+    REPRO_AUTOTUNE_CACHE    path of the JSON cache file
+    REPRO_AUTOTUNE_PLAN     JSON {key: [bm, bn, bk]} overriding everything
+    REPRO_AUTOTUNE_DISABLE  "1" -> best_plan == pick_blocks (pure model)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+import warnings
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+__all__ = ["autotune", "best_plan", "plan_key", "device_kind",
+           "cache_path", "measure_plan", "stats", "reset_stats",
+           "SCHEMA", "CACHE_ENV", "PLAN_ENV", "DISABLE_ENV", "BUILTIN"]
+
+SCHEMA = "repro.kernels.autotune/v1"
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+PLAN_ENV = "REPRO_AUTOTUNE_PLAN"
+DISABLE_ENV = "REPRO_AUTOTUNE_DISABLE"
+DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                             "autotune.json")
+
+# Built-in defaults: the lowest layer.  Keys are device-agnostic
+# ("*" device field) so they apply everywhere a cache/env entry doesn't;
+# values are (bm, bn, bk) known-good from the cost model at the shapes the
+# bench suite and serving projections hammer.  Deliberately sparse — the
+# cost model is the real cold-path fallback.
+BUILTIN: Dict[str, Tuple[int, int, int]] = {
+    "*/one/f2/float32->float32/2048x2048x2048": (512, 512, 512),
+    "*/one/f2/bfloat16->bfloat16/2048x2048x2048": (512, 512, 512),
+}
+
+_stats = {"measurements": 0, "env_hits": 0, "cache_hits": 0,
+          "builtin_hits": 0, "cost_model": 0}
+_warned_paths = set()
+
+
+def stats() -> dict:
+    """Counters since import/reset — CI's warm-run gate asserts
+    ``measurements == 0`` on a pre-warmed cache."""
+    return dict(_stats)
+
+
+def reset_stats() -> None:
+    for k in _stats:
+        _stats[k] = 0
+
+
+def device_kind() -> str:
+    """Backend + device kind, cache-key safe (spaces -> underscores)."""
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "unknown")
+    return f"{jax.default_backend()}:{kind}".replace(" ", "_")
+
+
+def plan_key(m: int, k: int, n: int, *, in_dtype=jnp.float32,
+             out_dtype=None, f: int = ops.KERNEL_F, carry: bool = False,
+             device: Optional[str] = None) -> str:
+    """Cache key.  Includes the input AND output dtypes (bf16 and fp32
+    never share a plan: their MXU rates, stream widths and therefore
+    optimal tiles differ) and the device kind (one cache file serves a
+    fleet of heterogeneous hosts)."""
+    ind = jnp.dtype(in_dtype).name
+    outd = jnp.dtype(out_dtype).name if out_dtype is not None else ind
+    dev = device_kind() if device is None else device
+    fam = "acc" if carry else "one"
+    return f"{dev}/{fam}/f{f}/{ind}->{outd}/{m}x{k}x{n}"
+
+
+def cache_path() -> str:
+    return os.environ.get(CACHE_ENV) or DEFAULT_CACHE
+
+
+def _warn_once(path: str, msg: str) -> None:
+    if path not in _warned_paths:
+        _warned_paths.add(path)
+        warnings.warn(msg, stacklevel=3)
+
+
+def _load_cache(path: Optional[str] = None) -> dict:
+    """Plans dict from the cache file; {} (with a warning) when the file
+    is missing, truncated, corrupt or has a foreign schema."""
+    path = cache_path() if path is None else path
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except FileNotFoundError:
+        return {}
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError, ValueError) as e:
+        _warn_once(path, f"autotune cache {path!r} unreadable ({e!r}); "
+                         "falling back to the cost model")
+        return {}
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA \
+            or not isinstance(doc.get("plans"), dict):
+        _warn_once(path, f"autotune cache {path!r} has no "
+                         f"{SCHEMA!r} plans section; ignoring it")
+        return {}
+    return doc["plans"]
+
+
+def _save_entry(key: str, entry: dict, path: Optional[str] = None) -> bool:
+    """Merge one measured winner into the cache file (atomic rename).
+    Unwritable locations degrade to False with a warning, never raise."""
+    path = cache_path() if path is None else path
+    plans = _load_cache(path)
+    plans[key] = entry
+    doc = {"schema": SCHEMA, "plans": plans}
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".autotune-")
+        with os.fdopen(fd, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return True
+    except OSError as e:
+        _warn_once(path, f"autotune cache {path!r} unwritable ({e!r}); "
+                         "winner not persisted")
+        return False
+
+
+def _env_plans() -> dict:
+    raw = os.environ.get(PLAN_ENV)
+    if not raw:
+        return {}
+    try:
+        d = json.loads(raw)
+        if not isinstance(d, dict):
+            raise ValueError("not an object")
+        return d
+    except ValueError as e:
+        _warn_once(PLAN_ENV, f"{PLAN_ENV} is not a JSON object ({e!r}); "
+                             "ignoring the override")
+        return {}
+
+
+def _plan_from_blocks(m, k, n, blocks, *, in_dtype, out_bytes, f, carry,
+                      require_exact, pipeline) -> Optional[ops.BlockPlan]:
+    """Materialize a BlockPlan from cached (bm, bn, bk); None when the
+    entry is malformed or violates the caller's exactness contract."""
+    try:
+        bm, bn, bk = (int(x) for x in blocks)
+    except (TypeError, ValueError):
+        return None
+    if min(bm, bn, bk) < 1 or bm % 128 or bn % 128 or bk % 128:
+        return None
+    pm = -(-m // bm) * bm
+    pk = -(-k // bk) * bk
+    pn = -(-n // bn) * bn
+    if require_exact and (pm, pk, pn) != (m, k, n):
+        return None
+    cand = ops.BlockPlan(m=m, k=k, n=n, bm=bm, bn=bn, bk=bk,
+                         pm=pm, pk=pk, pn=pn, cost_bytes=0)
+    acct = ops.plan_accounting(cand, out_bytes=out_bytes, f=f, carry=carry,
+                               in_dtype=in_dtype, pipeline=pipeline)
+    return dataclasses.replace(cand, cost_bytes=acct["total_bytes"])
+
+
+def _lookup(key: str, m, k, n, *, in_dtype, out_bytes, f, carry,
+            require_exact, pipeline, path: Optional[str] = None):
+    """Layered read: env override > cache file > built-in defaults.
+    Returns (plan, source) or (None, None)."""
+    star_key = "*/" + key.split("/", 1)[1]
+    env = _env_plans()
+    for kk in (key, star_key):
+        if kk in env:
+            plan = _plan_from_blocks(m, k, n, env[kk], in_dtype=in_dtype,
+                                     out_bytes=out_bytes, f=f, carry=carry,
+                                     require_exact=require_exact,
+                                     pipeline=pipeline)
+            if plan is not None:
+                return plan, "env"
+    cached = _load_cache(path)
+    if key in cached and isinstance(cached[key], dict):
+        plan = _plan_from_blocks(m, k, n, cached[key].get("blocks"),
+                                 in_dtype=in_dtype, out_bytes=out_bytes,
+                                 f=f, carry=carry,
+                                 require_exact=require_exact,
+                                 pipeline=pipeline)
+        if plan is not None:
+            return plan, "cache"
+    for kk in (key, star_key):
+        if kk in BUILTIN:
+            plan = _plan_from_blocks(m, k, n, BUILTIN[kk], in_dtype=in_dtype,
+                                     out_bytes=out_bytes, f=f, carry=carry,
+                                     require_exact=require_exact,
+                                     pipeline=pipeline)
+            if plan is not None:
+                return plan, "builtin"
+    return None, None
+
+
+def best_plan(m: int, k: int, n: int, *, in_dtype=jnp.float32,
+              out_dtype=None, f: int = ops.KERNEL_F, carry: bool = False,
+              require_exact: bool = False, vmem_budget: int = 8 * 2**20,
+              cache: Optional[str] = None) -> Optional[ops.BlockPlan]:
+    """Dispatch-side plan resolution: layered lookup, cost-model fallback.
+
+    NEVER measures — a cold cache costs exactly one ``pick_blocks`` call,
+    so dispatch latency is unchanged from the pre-autotune planner.  Set
+    ``REPRO_AUTOTUNE_DISABLE=1`` to force the pure cost model.
+    """
+    out_bytes = jnp.dtype(out_dtype).itemsize if out_dtype is not None else 4
+    if os.environ.get(DISABLE_ENV) != "1":
+        key = plan_key(m, k, n, in_dtype=in_dtype, out_dtype=out_dtype,
+                       f=f, carry=carry)
+        plan, source = _lookup(key, m, k, n, in_dtype=in_dtype,
+                               out_bytes=out_bytes, f=f, carry=carry,
+                               require_exact=require_exact, pipeline=True,
+                               path=cache)
+        if plan is not None:
+            _stats[f"{source}_hits"] += 1
+            return plan
+    _stats["cost_model"] += 1
+    return ops.pick_blocks(m, k, n, in_dtype=in_dtype, out_bytes=out_bytes,
+                           f=f, carry=carry, require_exact=require_exact,
+                           vmem_budget=vmem_budget)
+
+
+def measure_plan(m: int, k: int, n: int, plan: ops.BlockPlan, *,
+                 in_dtype=jnp.float32, out_dtype=None, carry: bool = False,
+                 reps: int = 2, seed: int = 0) -> float:
+    """Wall-time one plan (seconds, best of ``reps`` after a compile/warmup
+    call).  Runs the accumulate family — Pallas on TPU, the plan-sensitive
+    XLA twin on CPU (see module docstring)."""
+    _stats["measurements"] += 1
+    in_dtype = jnp.dtype(in_dtype)
+    integer = jnp.issubdtype(in_dtype, jnp.integer)
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else jnp.float32
+    rng = np.random.RandomState(seed)
+    if integer:
+        a = jnp.asarray(rng.randint(-4, 5, size=(m, k)), in_dtype)
+        b = jnp.asarray(rng.randint(-4, 5, size=(k, n)), in_dtype)
+    else:
+        a = jnp.asarray(rng.standard_normal((m, k)), in_dtype)
+        b = jnp.asarray(rng.standard_normal((k, n)), in_dtype)
+    c0 = jnp.zeros((m, n), out_dtype)
+    st0 = ops.acc_state_zeros(plan)
+    backend = "pallas" if ops.on_tpu() else "jnp"
+
+    def run():
+        c, st, stats_ = ops.abft_matmul_acc(
+            a, b, c0, st0, plan=plan, verify=carry, out_dtype=out_dtype,
+            backend=backend)
+        jax.block_until_ready((c, st, stats_))
+
+    run()                       # compile + warm caches
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(m: int, k: int, n: int, *, in_dtype=jnp.float32,
+             out_dtype=None, f: int = ops.KERNEL_F, carry: bool = False,
+             require_exact: bool = False, vmem_budget: int = 8 * 2**20,
+             top_k: int = 4, reps: int = 2, cache: Optional[str] = None,
+             write: bool = True):
+    """Measure the top-K model-ranked plans for one shape, persist the
+    winner.  Returns (plan, info dict).
+
+    A warm cache (or env override) short-circuits with ZERO measurements.
+    The cost-model plan is always measurement candidate #0, so the
+    returned plan beats or matches it on every measured shape by
+    construction.
+    """
+    out_bytes = jnp.dtype(out_dtype).itemsize if out_dtype is not None else 4
+    key = plan_key(m, k, n, in_dtype=in_dtype, out_dtype=out_dtype,
+                   f=f, carry=carry)
+    info = {"key": key, "measured_us": {}, "model_blocks": None}
+    plan, source = _lookup(key, m, k, n, in_dtype=in_dtype,
+                           out_bytes=out_bytes, f=f, carry=carry,
+                           require_exact=require_exact, pipeline=True,
+                           path=cache)
+    if plan is not None:
+        _stats[f"{source}_hits"] += 1
+        info["source"] = source
+        return plan, info
+    ranked = ops.rank_blocks(m, k, n, in_dtype=in_dtype,
+                             out_bytes=out_bytes, f=f, carry=carry,
+                             require_exact=require_exact,
+                             vmem_budget=vmem_budget)
+    if not ranked:
+        info["source"] = "none"
+        return None, info
+    cands = ranked[:max(1, top_k)]
+    info["model_blocks"] = (cands[0].bm, cands[0].bn, cands[0].bk)
+    best = None
+    best_t = float("inf")
+    for cand in cands:
+        t = measure_plan(m, k, n, cand, in_dtype=in_dtype,
+                         out_dtype=out_dtype, carry=carry, reps=reps)
+        info["measured_us"][f"{cand.bm}x{cand.bn}x{cand.bk}"] = t * 1e6
+        if t < best_t:
+            best, best_t = cand, t
+    info["source"] = "measured"
+    info["best_us"] = best_t * 1e6
+    if write:
+        entry = {"blocks": [best.bm, best.bn, best.bk],
+                 "best_us": best_t * 1e6,
+                 "model_blocks": list(info["model_blocks"]),
+                 "source": "measured"}
+        info["persisted"] = _save_entry(key, entry, path=cache)
+    return best, info

@@ -77,13 +77,20 @@ register_surface(
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *rest,
             k_steps: int, bq: int, bk: int, scale: float, causal: bool,
-            window, softcap, checksum: bool, inject):
+            window, softcap, checksum: bool, inject, pipeline: bool):
     if checksum:
         stats_ref, m_ref, l_ref, acc_ref, cs_ref, l2_ref = rest
     else:
         m_ref, l_ref, acc_ref = rest
     kk = pl.program_id(2)
     qi = pl.program_id(1)
+    bh = pl.program_id(0)
+    # pipelined grid: the normalize/residual epilogue gets a dot-free extra
+    # step (kk == k_steps) whose K/V block index is clamped to the last KV
+    # chunk — Pallas skips the re-fetch (block index unchanged) and instead
+    # prefetches the NEXT q-tile's first K/V chunk while the VPU divides,
+    # so the epilogue cost is hidden under DMA exactly as in abft_matmul.
+    epi_step = k_steps if pipeline else k_steps - 1
 
     @pl.when(kk == 0)
     def _init():
@@ -94,57 +101,61 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *rest,
             cs_ref[...] = jnp.zeros_like(cs_ref)
             l2_ref[...] = jnp.zeros_like(l2_ref)
 
-    q = q_ref[0].astype(jnp.float32)          # [bq, D]
-    k = k_ref[0].astype(jnp.float32)          # [bk, D]
-    v = v_ref[0].astype(jnp.float32)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    if softcap:
-        s = softcap * jnp.tanh(s / softcap)
+    @pl.when(kk <= k_steps - 1)
+    def _recurrence():
+        q = q_ref[0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s_capped = softcap * jnp.tanh(s / softcap)
+        else:
+            s_capped = s
 
-    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), jnp.bool_)
-    if causal:
-        mask &= q_pos >= k_pos
-    if window is not None:
-        # two-sided band: without the second bound a non-causal window
-        # admitted arbitrarily-far FUTURE keys
-        mask &= (q_pos - k_pos) < window
-        mask &= (k_pos - q_pos) < window
-    s = jnp.where(mask, s, NEG_INF)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            # two-sided band: without the second bound a non-causal window
+            # admitted arbitrarily-far FUTURE keys
+            mask &= (q_pos - k_pos) < window
+            mask &= (k_pos - q_pos) < window
+        sm = jnp.where(mask, s_capped, NEG_INF)
 
-    m_prev = m_ref[...]
-    l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    # mask p explicitly: on a fully-masked tile m_new stays NEG_INF and
-    # exp(s - m_new) = exp(0) = 1 would pollute l/acc (reachable now that
-    # a two-sided window can put a fully-masked tile first in kk order)
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    if checksum:
-        vc = jnp.sum(v, axis=-1, keepdims=True)           # [bk, 1]
-        cs_ref[...] = cs_ref[...] * corr + jnp.dot(
-            p, vc, preferred_element_type=jnp.float32)
-        l2_ref[...] = l2_ref[...] * corr + jnp.dot(
-            p, jnp.ones((bk, 1), jnp.float32),
-            preferred_element_type=jnp.float32)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sm, axis=-1, keepdims=True))
+        # mask p explicitly: on a fully-masked tile m_new stays NEG_INF and
+        # exp(s - m_new) = exp(0) = 1 would pollute l/acc (reachable now that
+        # a two-sided window can put a fully-masked tile first in kk order)
+        p = jnp.where(mask, jnp.exp(sm - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        if checksum:
+            vc = jnp.sum(v, axis=-1, keepdims=True)           # [bk, 1]
+            cs_ref[...] = cs_ref[...] * corr + jnp.dot(
+                p, vc, preferred_element_type=jnp.float32)
+            l2_ref[...] = l2_ref[...] * corr + jnp.dot(
+                p, jnp.ones((bk, 1), jnp.float32),
+                preferred_element_type=jnp.float32)
 
-    if inject is not None:
-        inj_qi, inj_kk, delta, target = inject
-        hit = ((pl.program_id(0) == 0) & (qi == inj_qi) & (kk == inj_kk))
+        if inject is not None:
+            inj_qi, inj_kk, delta, target = inject
+            hit = ((bh == 0) & (qi == inj_qi) & (kk == inj_kk))
 
-        @pl.when(hit)
-        def _inject():
-            if target == "l":
-                l_ref[0, 0] = l_ref[0, 0] + delta
-            else:
-                acc_ref[0, 0] = acc_ref[0, 0] + delta
+            @pl.when(hit)
+            def _inject():
+                if target == "l":
+                    l_ref[0, 0] = l_ref[0, 0] + delta
+                else:
+                    acc_ref[0, 0] = acc_ref[0, 0] + delta
 
-    @pl.when(kk == k_steps - 1)
+    @pl.when(kk == epi_step)
     def _epilogue():
         l_safe = jnp.maximum(l_ref[...], 1e-30)
         o = acc_ref[...] / l_safe
@@ -166,17 +177,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *rest,
 @functools.partial(
     jax.jit,
     static_argnames=("scale", "causal", "window", "softcap", "bq", "bk",
-                     "interpret", "checksum", "inject"))
+                     "interpret", "checksum", "inject", "pipeline"))
 def _flash_call(q, k, v, *, scale, causal, window, softcap, bq, bk,
-                interpret, checksum, inject):
+                interpret, checksum, inject, pipeline=True):
     bh, sq, d = q.shape
     sk = k.shape[1]
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
     k_steps = sk // bk
-    grid = (bh, sq // bq, k_steps)
+    grid = (bh, sq // bq, k_steps + (1 if pipeline else 0))
+    kv_block = (lambda b, i, kk: (b, jnp.minimum(kk, k_steps - 1), 0)) \
+        if pipeline else (lambda b, i, kk: (b, kk, 0))
     kernel = functools.partial(
         _kernel, k_steps=k_steps, bq=bq, bk=bk, scale=scale, causal=causal,
-        window=window, softcap=softcap, checksum=checksum, inject=inject)
+        window=window, softcap=softcap, checksum=checksum, inject=inject,
+        pipeline=pipeline)
     out_specs = pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0))
     out_shape = jax.ShapeDtypeStruct((bh, sq, d), q.dtype)
     scratch = [
@@ -198,8 +212,8 @@ def _flash_call(q, k, v, *, scale, causal, window, softcap, bq, bk,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, d), kv_block),
+            pl.BlockSpec((1, bk, d), kv_block),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
@@ -220,10 +234,11 @@ def flash_attention_pallas(
     bq: int = 256,
     bk: int = 256,
     interpret: bool = False,
+    pipeline: bool = True,
 ):
     return _flash_call(q, k, v, scale=scale, causal=causal, window=window,
                        softcap=softcap, bq=bq, bk=bk, interpret=interpret,
-                       checksum=False, inject=None)
+                       checksum=False, inject=None, pipeline=pipeline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,6 +282,7 @@ def flash_attention_checked(
     interpret: bool = False,
     tol: float = FLASH_CHECK_TOL,
     inject: Optional[Tuple[int, int, float, str]] = None,
+    pipeline: bool = True,
 ):
     """Checksummed flash attention: (o, FlashCheckReport).
 
@@ -280,7 +296,8 @@ def flash_attention_checked(
     """
     o, stats = _flash_call(
         q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, interpret=interpret, checksum=True, inject=inject)
+        bq=bq, bk=bk, interpret=interpret, checksum=True, inject=inject,
+        pipeline=pipeline)
     st = np.asarray(stats)
     # a NaN-contaminated tile must read as tripped, not compare false
     st = np.where(np.isnan(st), np.inf, st)

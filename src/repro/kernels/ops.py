@@ -32,8 +32,9 @@ from repro.kernels.checksum_encode import checksum_encode_pallas
 
 __all__ = [
     "BlockPlan", "abft_matmul", "abft_matmul_acc", "acc_state_zeros",
-    "checksum_encode", "correct_from_state", "kernel_weights", "on_tpu",
-    "pick_blocks", "plan_accounting", "reduce_state", "tile_checksums",
+    "checksum_encode", "correct_from_state", "detection_eps",
+    "kernel_weights", "mxu_rate", "on_tpu", "pick_blocks",
+    "plan_accounting", "rank_blocks", "reduce_state", "tile_checksums",
     "vmem_bytes",
 ]
 
@@ -71,16 +72,68 @@ def kernel_weights(m: int, f: int = KERNEL_F, dtype=jnp.float32) -> jax.Array:
 
 _CANDIDATE_BLOCKS = (128, 256, 512)
 
-# MXU-work term of the tiling cost model, in FLOPs per HBM-byte-equivalent.
-# The kernels accumulate in fp32, and fp32 matmul on the TPU MXU runs as a
-# multi-pass bf16 emulation at roughly 1/8 of bf16 peak (~275/8 ~ 34
-# Tflop/s against ~1.2 TB/s HBM on a v4-class part), so one HBM byte buys
-# ~28 fp32 FLOPs.  Scoring padded FLOPs at this rate stops small ragged
-# shapes from trading up to ~50% extra MXU work for a few saved HBM
-# re-streams (the 384x640x896 regression in tests/test_kernels.py) while
-# leaving exactly-tileable shapes untouched (their padded FLOPs are equal
-# across candidates, so the byte ordering decides as before).
+# Overlap-aware time model (v4-class part): bytes and FLOPs live on
+# SEPARATE resources — the HBM stream and the MXU run concurrently under
+# the Pallas double-buffered pipeline, so a candidate tiling costs
+#   t = max(t_hbm, t_mxu) + exposed_epilogue
+# rather than bytes + flop-byte-equivalents.  The MXU rate is dtype-aware:
+# fp32 matmul runs as a multi-pass bf16 emulation at ~1/8 of bf16 peak;
+# int8 doubles bf16 throughput.  The VPU rate prices the checksum
+# epilogue / verify-prologue reductions; with the pipelined kernel grid
+# (their own dot-free steps) that work hides under the next tile's A/B
+# fetch and only the remainder (``exposed_s``) lands on the critical path.
+HBM_BW = 819e9                       # bytes/s
+MXU_FLOPS = {                        # dtype name -> FLOP/s
+    "float32": 34e12,                # ~275/8: multi-pass bf16 emulation
+    "bfloat16": 197e12,
+    "int8": 394e12,
+}
+VPU_FLOPS = 4e12                     # checksum-reduction (epilogue) rate
+
+# Legacy single-score constant (pre-time-model planner): FLOPs per
+# HBM-byte-equivalent at the fp32 emulation rate.  Kept for reference and
+# external callers; ``pick_blocks`` now scores with the time model above.
 MXU_FP32_FLOPS_PER_BYTE = 28.0
+
+
+def mxu_rate(in_dtype) -> float:
+    """Modeled MXU FLOP/s for an A/B input dtype (planner time model)."""
+    dt = jnp.dtype(in_dtype)
+    if dt.name in MXU_FLOPS:
+        return MXU_FLOPS[dt.name]
+    if jnp.issubdtype(dt, jnp.integer):
+        return MXU_FLOPS["int8"]
+    if dt.itemsize == 2:
+        return MXU_FLOPS["bfloat16"]
+    return MXU_FLOPS["float32"]
+
+
+def detection_eps(dtype) -> float:
+    """Dtype-aware detection epsilon for the ABFT residual tolerances.
+
+    The carried checksums are fp32 functions of the ROUNDED stored values,
+    so fp32 eps is the floor for any storage dtype (including integers,
+    whose checksums are exact below 2^24); wider-rounding float storage
+    (bf16/fp16) contributes its own eps when states are re-derived through
+    the storage grid.  The old fp32-only constant silently over-fired on
+    bf16 data and was needlessly loose nowhere — this is the single eps
+    source for ``kernels`` and the ``core.abft_gemm`` residual check.
+    """
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.integer):
+        return float(jnp.finfo(jnp.float32).eps)
+    return float(max(jnp.finfo(dt).eps, jnp.finfo(jnp.float32).eps))
+
+
+def _resolve_in_dtype(in_dtype, in_bytes):
+    """(dtype, itemsize) from whichever of the two the caller provided."""
+    if in_dtype is not None:
+        dt = jnp.dtype(in_dtype)
+        return dt, dt.itemsize
+    size = 4 if in_bytes is None else in_bytes
+    dt = {1: jnp.dtype(jnp.int8), 2: jnp.dtype(jnp.bfloat16)}.get(
+        size, jnp.dtype(jnp.float32))
+    return dt, size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,20 +185,35 @@ def vmem_bytes(bm: int, bn: int, bk: int, *, in_bytes: int = 4,
             + 2 * 4 * f * (bm + bn))
 
 
-def plan_accounting(plan: BlockPlan, *, in_bytes: int = 4,
+def plan_accounting(plan: BlockPlan, *, in_bytes: Optional[int] = None,
                     out_bytes: int = 4, f: int = KERNEL_F,
-                    carry: bool = False) -> dict:
-    """Structural byte/FLOP accounting for one BlockPlan.
+                    carry: bool = False, in_dtype=None,
+                    pipeline: bool = True) -> dict:
+    """Structural byte/FLOP accounting + overlap-aware time model.
 
-    The single source of truth for the kernel's modeled HBM traffic — used
-    both by ``pick_blocks`` to score candidate tilings and by
-    ``benchmarks.bench_kernels`` to report it.  A is streamed once per
-    n-tile column, B once per m-tile row, C written once (read+written once
-    more with a carried state); both fused checksum directions add ZERO
-    extra reads (``extra_hbm_rd_col``/``_row``) — only the per-tile partial
-    writes (``cs_wr_bytes``) — whereas unfused post-GEMM encode einsums
-    would re-read all of C once per direction (``unfused_extra_rd``).
+    The single source of truth for the kernel's modeled cost — used both
+    by ``pick_blocks``/``rank_blocks`` to score candidate tilings and by
+    ``benchmarks.bench_kernels`` to report it.  Byte terms: A is streamed
+    once per n-tile column, B once per m-tile row, C written once
+    (read+written once more with a carried state); both fused checksum
+    directions add ZERO extra reads (``extra_hbm_rd_col``/``_row``) — only
+    the per-tile partial writes (``cs_wr_bytes``) — whereas unfused
+    post-GEMM encode einsums would re-read all of C once per direction
+    (``unfused_extra_rd``).
+
+    Time terms (seconds): bytes and MXU FLOPs occupy SEPARATE resources, so
+    ``t_total_s = max(t_hbm_s, t_mxu_s) + exposed_s`` where ``exposed_s``
+    is the part of the VPU checksum epilogue (+ verify prologue with
+    ``carry``) NOT hidden under the adjacent tile's operand fetch.  With
+    the pipelined kernel grid those stages overlap the next (i, j) tile's
+    A/B (+C_in) DMA, so per tile only ``max(0, t_vpu - t_fetch)`` is
+    exposed; the serial layout (``pipeline=False``) exposes all of it.
+    ``exposed_fraction`` = exposed share of the total VPU epilogue work.
+    ``in_dtype`` picks the dtype-aware MXU rate (fp32 emulation / bf16 /
+    int8); when only ``in_bytes`` is given the dtype is inferred from the
+    itemsize.
     """
+    in_dtype, in_bytes = _resolve_in_dtype(in_dtype, in_bytes)
     mt, nt, _ = plan.grid
     gemm_rd = (plan.pm * plan.pk * nt * in_bytes
                + plan.pk * plan.pn * mt * in_bytes)
@@ -156,6 +224,29 @@ def plan_accounting(plan: BlockPlan, *, in_bytes: int = 4,
         carry_bytes = (plan.pm * plan.pn * out_bytes + cs_wr
                        + mt * nt * STATS_WIDTH * 4)
     flops = 2 * plan.pm * plan.pk * plan.pn
+    cs_flops = 4 * f * plan.pm * plan.pn      # both directions, FMA=2 flops
+    total_bytes = gemm_rd + gemm_wr + cs_wr + carry_bytes
+    # ---- overlap-aware time model ---------------------------------------
+    rate = mxu_rate(in_dtype)
+    t_hbm = total_bytes / HBM_BW
+    t_mxu = flops / rate
+    t_epi = cs_flops / VPU_FLOPS
+    # verify prologue (carry): 2 passes x dual checksum recompute per tile
+    pro_flops = 8 * f * plan.pm * plan.pn if carry else 0
+    t_pro = pro_flops / VPU_FLOPS
+    n_tiles = mt * nt
+    # operand bytes the pipeline can prefetch for one (i, j) tile while the
+    # previous tile's epilogue / this tile's prologue runs on the VPU
+    fetch_tile = (plan.pk * (plan.bm + plan.bn) * in_bytes
+                  + (plan.bm * plan.bn * out_bytes if carry else 0))
+    t_fetch_tile = fetch_tile / HBM_BW
+    per_tile_vpu = (t_epi + t_pro) / n_tiles
+    if pipeline:
+        exposed = max(0.0, per_tile_vpu - t_fetch_tile) * n_tiles
+    else:
+        exposed = t_epi + t_pro
+    t_total = max(t_hbm, t_mxu) + exposed
+    vpu_total = t_epi + t_pro
     return dict(
         gemm_bytes=gemm_rd + gemm_wr,
         extra_hbm_rd_col=0,                   # reduced from the VMEM acc
@@ -164,43 +255,56 @@ def plan_accounting(plan: BlockPlan, *, in_bytes: int = 4,
         carry_bytes=carry_bytes,
         unfused_extra_rd=2 * plan.pm * plan.pn * out_bytes,
         flops=flops,
-        cs_flops=4 * f * plan.pm * plan.pn,   # both directions, FMA=2 flops
-        total_bytes=gemm_rd + gemm_wr + cs_wr + carry_bytes,
+        cs_flops=cs_flops,
+        total_bytes=total_bytes,
+        mxu_rate=rate,
+        t_hbm_s=t_hbm,
+        t_mxu_s=t_mxu,
+        t_epilogue_s=t_epi,
+        t_prologue_s=t_pro,
+        exposed_s=exposed,
+        exposed_fraction=exposed / vpu_total if vpu_total else 0.0,
+        t_total_s=t_total,
     )
 
 
-def pick_blocks(
+def rank_blocks(
     m: int,
     k: int,
     n: int,
     *,
     vmem_budget: int = 8 * 2**20,
-    in_bytes: int = 4,
+    in_bytes: Optional[int] = None,
     out_bytes: int = 4,
     f: int = KERNEL_F,
     carry: bool = False,
     require_exact: bool = False,
-) -> Optional[BlockPlan]:
-    """Plan the cheapest MXU-aligned tiling for an (m, k, n) ABFT-GEMM.
+    in_dtype=None,
+    pipeline: bool = True,
+) -> list:
+    """All qualifying MXU-aligned tilings for an (m, k, n) ABFT-GEMM,
+    best-first under the overlap-aware time model.
 
     Candidate (bm, bn, bk) tilings are scored by ``plan_accounting``'s
-    modeled HBM bytes on the zero-padded dims PLUS the padded MXU work
-    converted to byte-equivalents at ``MXU_FP32_FLOPS_PER_BYTE`` — bytes
-    price the re-streams, the FLOP term prices the padding waste, so the
-    planner no longer buys fewer HBM passes with up to ~50% extra MXU work
-    on small ragged shapes.  ``cost_bytes`` on the returned plan stays the
-    pure byte cost (``plan_accounting``'s ``total_bytes``), so bench
-    accounting is unchanged.  Tilings whose working set (double-buffered
-    A/B streams, fp32
-    accumulator, C_in tile when ``carry``, weight/checksum tiles) exceeds
+    ``t_total_s`` — ``max(t_hbm, t_mxu) + exposed_epilogue`` with the
+    dtype-aware MXU rate — so the model prices re-streams (HBM term),
+    padding waste (MXU term) and un-hidden checksum work (exposed term) in
+    one unit.  Ties (e.g. exactly-tileable compute-bound shapes, where
+    padded FLOPs are equal across candidates) break toward fewer modeled
+    bytes, then bigger tiles.  ``cost_bytes`` on each plan stays the pure
+    byte cost (``total_bytes``), so bench accounting is unchanged.
+    Tilings whose working set (double-buffered A/B streams, accumulator,
+    C_in tile when ``carry``, weight/checksum tiles) exceeds
     ``vmem_budget`` are discarded.  ``require_exact`` restricts the search
     to tilings that divide (m, k, n) with no padding — callers that keep a
-    long-lived carried state (the SUMMA local update) need this, since the
-    cost model may otherwise prefer a padded plan whose fewer HBM re-streams
-    buy extra MXU work.  Returns None if no candidate qualifies.
+    long-lived carried state (the SUMMA local update) need this.
+
+    This ranking is what ``kernels.autotune`` measures: the top-K plans
+    here are the measurement candidates, and element 0 is the pure
+    cost-model answer (``pick_blocks``).
     """
-    best: Optional[BlockPlan] = None
-    best_key = None
+    in_dtype, in_bytes = _resolve_in_dtype(in_dtype, in_bytes)
+    ranked = []
     for bm in _CANDIDATE_BLOCKS:
         for bn in _CANDIDATE_BLOCKS:
             for bk in _CANDIDATE_BLOCKS:
@@ -215,17 +319,42 @@ def pick_blocks(
                                  pm=pm, pk=pk, pn=pn, cost_bytes=0)
                 acct = plan_accounting(cand, in_bytes=in_bytes,
                                        out_bytes=out_bytes, f=f,
-                                       carry=carry)
+                                       carry=carry, in_dtype=in_dtype,
+                                       pipeline=pipeline)
                 cost = acct["total_bytes"]
-                # score = bytes + MXU work in byte-equivalents: re-streams
-                # and padding waste priced in the same unit
-                score = cost + acct["flops"] / MXU_FP32_FLOPS_PER_BYTE
-                # prefer cheaper traffic; tie-break toward bigger tiles
-                key = (score, -(bm * bn * bk), -bk)
-                if best_key is None or key < best_key:
-                    best_key = key
-                    best = dataclasses.replace(cand, cost_bytes=cost)
-    return best
+                # modeled wall time first; tie-break toward cheaper
+                # traffic, then bigger tiles
+                key = (acct["t_total_s"], cost, -(bm * bn * bk), -bk)
+                ranked.append((key, dataclasses.replace(cand,
+                                                        cost_bytes=cost)))
+    ranked.sort(key=lambda kp: kp[0])
+    return [p for _, p in ranked]
+
+
+def pick_blocks(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    vmem_budget: int = 8 * 2**20,
+    in_bytes: Optional[int] = None,
+    out_bytes: int = 4,
+    f: int = KERNEL_F,
+    carry: bool = False,
+    require_exact: bool = False,
+    in_dtype=None,
+    pipeline: bool = True,
+) -> Optional[BlockPlan]:
+    """Best tiling under the cost model — ``rank_blocks(...)[0]``.
+
+    Returns None if no candidate qualifies.  For a MEASURED choice (with
+    on-disk persistence) use ``kernels.autotune.best_plan`` / ``autotune``.
+    """
+    ranked = rank_blocks(m, k, n, vmem_budget=vmem_budget,
+                         in_bytes=in_bytes, out_bytes=out_bytes, f=f,
+                         carry=carry, require_exact=require_exact,
+                         in_dtype=in_dtype, pipeline=pipeline)
+    return ranked[0] if ranked else None
 
 
 def _pad2(x: jax.Array, pr: int, pc: int) -> jax.Array:
@@ -306,7 +435,11 @@ def abft_matmul(
     """
     m, k = a.shape
     n = b.shape[1]
-    out_dtype = out_dtype or a.dtype
+    if out_dtype is None:
+        # int8 inputs accumulate exactly in int32 — an int8 output would
+        # overflow on the first dot
+        out_dtype = jnp.int32 if jnp.issubdtype(a.dtype, jnp.integer) \
+            else a.dtype
     if wm is not None:
         f = wm.shape[0]   # before building the default wn: shapes must agree
     wm = kernel_weights(m, f) if wm is None else wm
@@ -314,8 +447,11 @@ def abft_matmul(
     if wn.shape != (n, f):
         raise ValueError(f"wn shape {wn.shape} != ({n}, {f})")
     if plan is None:
-        plan = pick_blocks(m, k, n, in_bytes=a.dtype.itemsize,
-                           out_bytes=jnp.dtype(out_dtype).itemsize, f=f)
+        # layered plan resolution: autotune cache / env override when warm,
+        # the pure cost model otherwise (never measures at dispatch time)
+        from repro.kernels import autotune  # lazy: autotune imports ops
+        plan = autotune.best_plan(m, k, n, in_dtype=a.dtype,
+                                  out_dtype=out_dtype, f=f)
     if plan is not None and (on_tpu() or force_pallas) \
             and plan.waste <= max_waste:
         return _fused_mm(plan, jnp.dtype(out_dtype), not on_tpu(),
@@ -384,9 +520,10 @@ def correct_from_state(c: jax.Array, state, wm: jax.Array, wn: jax.Array,
     """
     ccol_c, crow_c = state
     pm, pn = c.shape
-    # fp32 eps: carried checksums are fp32 functions of the rounded stored
-    # values, so storage dtype adds no recompute mismatch (see kernel).
-    eps_c = float(jnp.finfo(jnp.float32).eps)
+    # dtype-aware eps: fp32 floor (carried checksums are fp32 functions of
+    # the rounded stored values), widened to the storage grid for bf16/fp16
+    # so re-derived states never false-alarm (see detection_eps)
+    eps_c = detection_eps(c.dtype)
     c32 = c.astype(jnp.float32)
     scale = jnp.mean(jnp.abs(c32)) + 1e-30
     tol_c = tol_factor * bm * eps_c * scale
@@ -426,10 +563,13 @@ def correct_from_state(c: jax.Array, state, wm: jax.Array, wn: jax.Array,
         carried = ccol_c[tile_i, 0, cidx]
         x_new = (carried - jnp.dot(w_seg, seg)) / (wm[0, ridx] + 1e-30)
         c32 = jnp.where(single, c32.at[ridx, cidx].set(x_new), c32)
+    if jnp.issubdtype(c.dtype, jnp.integer):
+        c32 = jnp.round(c32)   # integer storage: snap the repair to grid
     return c32.astype(c.dtype), detected, corrected, loc_r, loc_c
 
 
-def _tile_verify_correct(c32, state, wm, wn, bm, bn, *, tol_factor):
+def _tile_verify_correct(c32, state, wm, wn, bm, bn, *, tol_factor,
+                         eps_c: Optional[float] = None):
     """Vectorized-over-tiles twin of the kernel's verify/correct prologue.
 
     Exactly the math of ``kernels.abft_matmul._verify_correct``, batched
@@ -442,7 +582,7 @@ def _tile_verify_correct(c32, state, wm, wn, bm, bn, *, tol_factor):
     pm, pn = c32.shape
     mt, nt = pm // bm, pn // bn
     f = wm.shape[0]
-    eps_c = float(jnp.finfo(jnp.float32).eps)
+    eps_c = detection_eps(jnp.float32) if eps_c is None else eps_c
     t = c32.reshape(mt, bm, nt, bn).transpose(0, 2, 1, 3)        # [mt,nt,bm,bn]
     wmt = wm.astype(jnp.float32).reshape(f, mt, bm).transpose(1, 0, 2)
     wnt = wn.astype(jnp.float32).reshape(nt, bn, f)
@@ -507,17 +647,24 @@ def abft_matmul_acc(
     out_dtype=None,
     backend: str = "auto",
     interpret: Optional[bool] = None,
+    pipeline: bool = True,
 ):
     """C_out = C_in + A @ B with carried checksum state and fused scrub.
 
     ``state`` is the (ccol, crow) pair from ``acc_state_zeros`` or a prior
     call under the same ``plan``.  ``backend``: "pallas" runs the fused
     kernel (interpret mode off-TPU), "jnp" the XLA twin (same semantics,
-    separate einsums), "auto" picks pallas on TPU.  Returns
-    (c_out [m, n], new_state, stats [mt, nt, STATS_WIDTH]).
+    separate einsums), "auto" picks pallas on TPU.  A/B may be fp32, bf16
+    or int8 (int32 accumulation, integer C; repairs snap to the integer
+    grid, so the int8 path stays bit-exact); the verify tolerance uses the
+    dtype-aware ``detection_eps`` of the C storage dtype.  ``pipeline``
+    selects the pipelined kernel grid (dot-free prologue/epilogue steps).
+    Returns (c_out [m, n], new_state, stats [mt, nt, STATS_WIDTH]).
     """
     m, n = c_in.shape
     out_dtype = out_dtype or c_in.dtype
+    int_data = jnp.issubdtype(a.dtype, jnp.integer)
+    eps_c = detection_eps(c_in.dtype)
     f = KERNEL_F if wm is None else wm.shape[0]
     wm = kernel_weights(m, f) if wm is None else wm
     wn = kernel_weights(n, f).T if wn is None else wn
@@ -534,19 +681,31 @@ def abft_matmul_acc(
         c, ccol, crow, stats = abft_matmul_acc_pallas(
             a_p, b_p, c_p, ccol_in, crow_in, wm_p, wn_p,
             bm=plan.bm, bn=plan.bn, bk=plan.bk, verify=verify,
-            tol_factor=tol_factor, out_dtype=out_dtype, interpret=interpret)
+            tol_factor=tol_factor, out_dtype=out_dtype, interpret=interpret,
+            eps_c=eps_c, pipeline=pipeline)
         return c[:m, :n], (ccol, crow), stats
     # --- XLA twin: identical semantics, separate (unfused) einsums --------
     c32 = c_p.astype(jnp.float32)
     mt, nt = plan.pm // plan.bm, plan.pn // plan.bn
     if verify:
         c32, stats = _tile_verify_correct(
-            c32, state, wm_p, wn_p, plan.bm, plan.bn, tol_factor=tol_factor)
+            c32, state, wm_p, wn_p, plan.bm, plan.bn, tol_factor=tol_factor,
+            eps_c=eps_c)
     else:
         stats = jnp.zeros((mt, nt, STATS_WIDTH), jnp.float32)
         stats = stats.at[..., 2:4].set(-1.0)
-    c32 = c32 + jnp.dot(a_p.astype(jnp.float32), b_p.astype(jnp.float32),
-                        preferred_element_type=jnp.float32)
+    if int_data:
+        # mirror the kernel's exact int32 accumulation (int values < 2^24
+        # are exact in fp32, so the fp32 carrier stays bit-faithful)
+        c32 = c32 + jnp.dot(a_p, b_p,
+                            preferred_element_type=jnp.int32
+                            ).astype(jnp.float32)
+    else:
+        c32 = c32 + jnp.dot(a_p.astype(jnp.float32),
+                            b_p.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    if jnp.issubdtype(jnp.dtype(out_dtype), jnp.integer):
+        c32 = jnp.round(c32)   # repairs may leave eps off the int grid
     c_out = c32.astype(out_dtype)
     new_state = tile_checksums(c_out.astype(jnp.float32), wm_p, wn_p,
                                plan.bm, plan.bn)

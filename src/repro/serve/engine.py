@@ -207,7 +207,8 @@ class ServeEngine:
                  max_len: int = 256, abft_mode: str = "off",
                  abft_backend: str = "auto", mesh: Optional[Mesh] = None,
                  abft_reduce: str = "off", abft_f: int = 2,
-                 sdc: Optional[SDCInjector] = None, scrub_every: int = 0):
+                 sdc: Optional[SDCInjector] = None, scrub_every: int = 0,
+                 kernel_dtype: str = "fp32"):
         assert cfg.n_enc_layers == 0, "engine serves decoder-only archs"
         if abft_reduce not in ("off", "verify", "correct"):
             raise ValueError(f"unknown abft_reduce {abft_reduce!r}")
@@ -226,8 +227,14 @@ class ServeEngine:
         # abft_backend="pallas" puts every protected projection of both
         # compiled programs (prefill_1, decode_B) on the fused dual-checksum
         # kernel; "auto" does so on TPU (see core.abft_gemm).
+        # kernel_dtype narrows the protected-projection operand stream
+        # (bf16 / int8 MXU rates); checksums stay fp32 with dtype-aware
+        # detection eps, so the serving projections ride the mixed-
+        # precision kernels without loosening the SDC promises.
+        self.kernel_dtype = kernel_dtype
         self.abft = StepOptions(abft_mode=abft_mode,
-                                abft_backend=abft_backend).abft
+                                abft_backend=abft_backend,
+                                kernel_dtype=kernel_dtype).abft
 
         if mesh is None and self._protected:
             # the protected reduction needs a mesh axis to reduce over; a

@@ -41,6 +41,11 @@ class StepOptions:
     # the fused dual-checksum kernel (kernels.ops), "ref" keeps plain XLA,
     # "auto" fuses on TPU (core.abft_gemm dispatch).
     abft_backend: str = "auto"
+    # operand dtype for the ABFT-protected projections: "fp32" | "bf16" |
+    # "int8".  Narrows only the GEMM A/B stream (checksums stay fp32 with
+    # dtype-aware detection eps — core.abft_gemm); int8 composes with the
+    # grad_compression="int8_ef" wire for the end-to-end low-precision run.
+    kernel_dtype: str = "fp32"
     grad_compression: str = "none"  # none | int8_ef
     aux_weight: float = 0.01
     # defer the DP gradient all-reduce to AFTER microbatch accumulation
@@ -95,7 +100,8 @@ class StepOptions:
         if self.abft_mode == "off":
             return None
         return ABFTConfig(mode=self.abft_mode, f=self.abft_f,
-                          backend=self.abft_backend)
+                          backend=self.abft_backend,
+                          in_dtype=self.kernel_dtype)
 
 
 # ---------------------------------------------------------------------------

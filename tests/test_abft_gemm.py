@@ -138,3 +138,89 @@ def test_grad_flows_through_protected_matmul(rs):
     g_ref = jax.grad(lambda w: jnp.sum((X @ w) ** 2))(W)
     np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
                                rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# PR 9: mixed-precision layer path with dtype-aware detection thresholds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("m,k,n", [(8, 32, 48), (64, 256, 384),
+                                   (128, 512, 256), (16, 128, 640)])
+def test_clean_bf16_never_false_alarms(rs, backend, m, k, n):
+    """Regression for the dtype-blind threshold: a clean bf16 matmul must
+    verify ok at EVERY tested shape.  (With fp32 eps the bf16-quantized
+    checksum columns of w_enc tripped the detector on clean data.)"""
+    cfg = ABFTConfig(mode="verify", f=2, backend=backend, in_dtype="bf16")
+    W = jnp.asarray(rs.standard_normal((k, n)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((m, k)), jnp.float32)
+    y, ok = abft_matmul(X, encode_weight(W, cfg), cfg)
+    assert bool(ok), f"clean bf16 false alarm at {(m, k, n)} [{backend}]"
+    scale = float(jnp.max(jnp.abs(np.asarray(X @ W)))) + 1e-30
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(X @ W), atol=0.15 * scale)
+
+
+def test_bf16_flip_detected_and_corrected(rs):
+    """An exponent-scale flip in bf16-path output is detected, located and
+    corrected at the dtype-appropriate tolerance."""
+    cfg = ABFTConfig(mode="verify", f=2, in_dtype="bf16")
+    W = jnp.asarray(rs.standard_normal((64, 96)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((8, 64)), jnp.float32)
+    yf = jnp.dot(X.astype(jnp.bfloat16),
+                 encode_weight(W, cfg).astype(jnp.bfloat16),
+                 preferred_element_type=jnp.float32)
+    y, ycs = yf[:, :-2], yf[:, -2:]
+    ok, _ = verify_output(y, ycs, cfg)
+    assert bool(ok)
+    y_bad = y.at[3, 40].add(4e4)            # exponent-bit-flip magnitude
+    ok, res = verify_output(y_bad, ycs, cfg)
+    assert not bool(ok)
+    y_fix = correct_output(y_bad, ycs, res, cfg)
+    # repair accuracy is floored by bf16 checksum quantization:
+    # eps_bf16 * sqrt(k) * scale ~ 0.13 here; well below the 4e4 flip
+    np.testing.assert_allclose(np.asarray(y_fix), np.asarray(y),
+                               rtol=2e-2, atol=5e-1)
+    assert float(jnp.max(jnp.abs(y_fix - y))) < 1.0
+
+
+def test_clean_int8_verifies_ok(rs):
+    cfg = ABFTConfig(mode="verify", f=2, in_dtype="int8")
+    W = jnp.asarray(rs.standard_normal((64, 96)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((8, 64)), jnp.float32)
+    y, ok = abft_matmul(X, encode_weight(W, cfg), cfg)
+    assert bool(ok)
+    # dynamic int8 quantization: ~1% relative fidelity on unit-normal data
+    scale = float(jnp.max(jnp.abs(np.asarray(X @ W)))) + 1e-30
+    np.testing.assert_allclose(np.asarray(y), np.asarray(X @ W),
+                               atol=0.1 * scale)
+
+
+def test_int8_flip_detected_and_corrected(rs):
+    """correct mode on the int8 wire repairs an injected flip back to the
+    clean quantized product."""
+    cfg = ABFTConfig(mode="correct", f=2, in_dtype="int8")
+    W = jnp.asarray(rs.standard_normal((64, 96)), jnp.float32)
+    X = jnp.asarray(rs.standard_normal((8, 64)), jnp.float32)
+    w_enc = encode_weight(W, cfg)
+    from repro.core.abft_gemm import _int8_forward, _residual_ok
+    yf, res = _int8_forward(X, w_enc, cfg)
+    y, ycs = yf[:, :-2], yf[:, -2:]
+    assert bool(_residual_ok(y, res, cfg))
+    y_bad = y.at[5, 17].add(3e3)
+    _, res_bad = verify_output(y_bad, ycs, cfg)
+    assert not bool(_residual_ok(y_bad, res_bad, cfg))
+    y_fix = correct_output(y_bad, ycs, res_bad, cfg)
+    np.testing.assert_allclose(np.asarray(y_fix), np.asarray(y),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_step_options_thread_kernel_dtype():
+    from repro.train.step import StepOptions
+    opts = StepOptions(abft_mode="verify", kernel_dtype="bf16")
+    assert opts.abft.in_dtype == "bf16"
+    assert opts.abft.compute_dtype == jnp.bfloat16
+    assert StepOptions(abft_mode="verify").abft.in_dtype == "fp32"
+    with pytest.raises(ValueError):
+        ABFTConfig(mode="verify", in_dtype="fp8").compute_dtype

@@ -1,0 +1,131 @@
+"""Autotune cache behavior: layered resolution, cold/warm paths, corrupt
+and unwritable caches, env overrides, and dtype-keyed plans."""
+import json
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import ops
+
+M = K = N = 256
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(monkeypatch, tmp_path):
+    """Every test gets its own cache file and clean counters/env."""
+    monkeypatch.delenv(at.PLAN_ENV, raising=False)
+    monkeypatch.delenv(at.DISABLE_ENV, raising=False)
+    monkeypatch.setenv(at.CACHE_ENV, str(tmp_path / "autotune.json"))
+    at.reset_stats()
+    at._warned_paths.clear()
+    yield tmp_path
+
+
+def test_cold_miss_falls_back_to_cost_model():
+    plan = at.best_plan(M, K, N)
+    model = ops.pick_blocks(M, K, N)
+    assert plan == model
+    st = at.stats()
+    assert st["cost_model"] == 1
+    assert st["measurements"] == 0          # best_plan NEVER measures
+    assert st["cache_hits"] == 0
+
+
+def test_autotune_measures_persists_and_warm_run_skips(tmp_path):
+    plan, info = at.autotune(M, K, N, top_k=2, reps=1)
+    assert plan is not None
+    assert info["source"] == "measured"
+    n_meas = at.stats()["measurements"]
+    assert n_meas == 2                       # top_k candidates, once each
+    assert info["persisted"]
+
+    # the winner beats or matches the cost-model plan by construction:
+    # the model plan is always candidate #0 of the measured set
+    mb = "x".join(str(b) for b in info["model_blocks"])
+    wb = f"{plan.bm}x{plan.bn}x{plan.bk}"
+    assert info["measured_us"][wb] <= info["measured_us"][mb]
+
+    # warm paths: both autotune() and best_plan() resolve from the cache
+    # with ZERO further measurements
+    plan2, info2 = at.autotune(M, K, N, top_k=2, reps=1)
+    assert info2["source"] == "cache"
+    assert (plan2.bm, plan2.bn, plan2.bk) == (plan.bm, plan.bn, plan.bk)
+    plan3 = at.best_plan(M, K, N)
+    assert (plan3.bm, plan3.bn, plan3.bk) == (plan.bm, plan.bn, plan.bk)
+    st = at.stats()
+    assert st["measurements"] == n_meas
+    assert st["cache_hits"] == 2
+
+
+@pytest.mark.parametrize("payload", [
+    "{ not json",                                   # corrupt
+    '{"schema": "repro.kernels.autotune/v1", "pl',  # truncated
+    '{"schema": "something/else", "plans": {}}',    # foreign schema
+    '[1, 2, 3]',                                    # wrong shape
+])
+def test_corrupt_cache_ignored_with_warning(tmp_path, payload):
+    (tmp_path / "autotune.json").write_text(payload)
+    with pytest.warns(UserWarning, match="autotune cache"):
+        plan = at.best_plan(M, K, N)
+    assert plan == ops.pick_blocks(M, K, N)         # clean fallback
+    assert at.stats()["measurements"] == 0
+
+
+def test_env_override_wins_over_cache(tmp_path, monkeypatch):
+    # warm the cache with a measured winner first
+    plan, _ = at.autotune(M, K, N, top_k=1, reps=1)
+    key = at.plan_key(M, K, N)
+    override = {key: [128, 128, 128]}
+    monkeypatch.setenv(at.PLAN_ENV, json.dumps(override))
+    got = at.best_plan(M, K, N)
+    assert (got.bm, got.bn, got.bk) == (128, 128, 128)
+    assert at.stats()["env_hits"] >= 1
+    # device-wildcard form resolves too
+    star = {"*/" + key.split("/", 1)[1]: [128, 128, 128]}
+    monkeypatch.setenv(at.PLAN_ENV, json.dumps(star))
+    got = at.best_plan(M, K, N)
+    assert (got.bm, got.bn, got.bk) == (128, 128, 128)
+
+
+def test_disable_env_forces_pure_cost_model(monkeypatch):
+    at.autotune(M, K, N, top_k=1, reps=1)
+    monkeypatch.setenv(at.DISABLE_ENV, "1")
+    at.reset_stats()
+    plan = at.best_plan(M, K, N)
+    assert plan == ops.pick_blocks(M, K, N)
+    assert at.stats()["cache_hits"] == 0
+
+
+def test_cache_key_includes_dtype():
+    k32 = at.plan_key(M, K, N, in_dtype=jnp.float32)
+    kbf = at.plan_key(M, K, N, in_dtype=jnp.bfloat16)
+    k8 = at.plan_key(M, K, N, in_dtype=jnp.int8, out_dtype=jnp.int32)
+    assert len({k32, kbf, k8}) == 3
+    # a bf16 winner must NOT serve fp32 lookups
+    at.autotune(M, K, N, in_dtype=jnp.bfloat16, top_k=1, reps=1)
+    at.reset_stats()
+    at.best_plan(M, K, N, in_dtype=jnp.bfloat16)
+    assert at.stats()["cache_hits"] == 1
+    at.best_plan(M, K, N, in_dtype=jnp.float32)
+    assert at.stats()["cost_model"] == 1
+
+
+def test_unwritable_cache_degrades_with_warning(tmp_path, monkeypatch):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a file where a directory must go")
+    monkeypatch.setenv(at.CACHE_ENV, str(blocker / "autotune.json"))
+    with pytest.warns(UserWarning, match="unwritable"):
+        plan, info = at.autotune(M, K, N, top_k=1, reps=1)
+    assert plan is not None                          # tuning still works
+    assert info["persisted"] is False
+
+
+def test_cached_entry_honors_require_exact(tmp_path):
+    # persist a winner for a ragged shape whose blocks pad it, then ask
+    # for an exact plan: the cached entry must not satisfy the contract
+    key = at.plan_key(100, K, N)
+    at._save_entry(key, {"blocks": [128, 128, 128]})
+    plan = at.best_plan(100, K, N, require_exact=True)
+    assert plan is None                              # pick_blocks verdict

@@ -331,3 +331,141 @@ def test_ops_fallback_matches_kernel(rs):
                                rtol=1e-3, atol=1e-1)
     np.testing.assert_allclose(np.asarray(row1), np.asarray(row2),
                                rtol=1e-3, atol=1e-1)
+
+
+# ---------------------------------------------------------------------------
+# PR 9: pipelined grid, mixed precision, overlap-aware accounting
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_grid_matches_serial(rs):
+    """The dot-free epilogue/prologue grid steps are a pure scheduling
+    change: pipelined and serial layouts must agree bit-for-bit."""
+    a = jnp.asarray(rs.standard_normal((256, 512)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((512, 256)), jnp.float32)
+    wm, wn = _weights(256, 256)
+    pipe = abft_matmul_pallas(a, b, wm, wn, bm=128, bn=128, bk=256,
+                              interpret=True, pipeline=True)
+    ser = abft_matmul_pallas(a, b, wm, wn, bm=128, bn=128, bk=256,
+                             interpret=True, pipeline=False)
+    for x, y in zip(pipe, ser):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pipelined_acc_matches_serial(rs):
+    a = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rs.standard_normal((256, 256)), jnp.float32)
+    plan = ops.pick_blocks(256, 256, 256, carry=True, require_exact=True,
+                           vmem_budget=2 * 2 ** 20)
+    c0 = jnp.zeros((256, 256), jnp.float32)
+    st0 = ops.acc_state_zeros(plan)
+    outs = {}
+    for pipeline in (True, False):
+        c, st, stats = ops.abft_matmul_acc(
+            a, b, c0, st0, plan=plan, backend="pallas", pipeline=pipeline)
+        outs[pipeline] = (c, *st, stats)
+    for x, y in zip(outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_abft_matmul_kernel_int8_exact(rs):
+    """int8 operands ride the int32-accumulator wire: output and fp32
+    checksums (of integers < 2^24) are EXACT, not toleranced."""
+    m = k = n = 256
+    a = jnp.asarray(rs.randint(-8, 9, size=(m, k)), jnp.int8)
+    b = jnp.asarray(rs.randint(-8, 9, size=(k, n)), jnp.int8)
+    wm, wn = _weights(m, n)
+    c, ccol, crow = abft_matmul_pallas(a, b, wm, wn, bm=128, bn=128, bk=128,
+                                       interpret=True)
+    assert c.dtype == jnp.int32
+    c_np = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(c, np.int64), c_np)
+    got = np.asarray(jnp.sum(ccol, axis=0))
+    want = np.asarray(_weights(m, n)[0] @ c.astype(jnp.float32))
+    # plain Huang-Abraham sum row: integer data < 2^24 -> fp32-EXACT;
+    # the Gaussian-weighted rows round per summation order
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-2)
+
+
+def test_int8_dispatch_defaults(rs):
+    """ops.abft_matmul infers an int32 output for integer operands on
+    both the kernel and the XLA fallback."""
+    a = jnp.asarray(rs.randint(-8, 9, size=(256, 256)), jnp.int8)
+    b = jnp.asarray(rs.randint(-8, 9, size=(256, 256)), jnp.int8)
+    c1, _, _ = ops.abft_matmul(a, b, force_pallas=True)
+    c2, _, _ = ops.abft_matmul(a, b, force_pallas=False)
+    assert c1.dtype == jnp.int32 and c2.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_acc_int8_data_flip_repairs_bit_exact(rs):
+    """A bit flip in the carried int32 data between chained int8 calls is
+    located and repaired EXACTLY by the verify prologue (integer data,
+    exact fp32 checksums, rounded write-back)."""
+    m = k = n = 256
+    plan = ops.pick_blocks(m, k, n, carry=True, require_exact=True,
+                           vmem_budget=2 * 2 ** 20)
+    mk8 = lambda sh: jnp.asarray(rs.randint(-4, 5, size=sh), jnp.int8)
+    a1, a2, b1, b2 = mk8((m, k)), mk8((m, k)), mk8((k, n)), mk8((k, n))
+    c0 = jnp.zeros((m, n), jnp.int32)
+    st0 = ops.acc_state_zeros(plan)
+    c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
+                                     backend="pallas", out_dtype=jnp.int32)
+    c2, _, _ = ops.abft_matmul_acc(a2, b2, c1, st1, plan=plan,
+                                   backend="pallas", out_dtype=jnp.int32)
+    bad = np.asarray(c1).copy()
+    bad[7, 9] ^= 1 << 20
+    c2f, _, stats = ops.abft_matmul_acc(a2, b2, jnp.asarray(bad), st1,
+                                        plan=plan, backend="pallas",
+                                        out_dtype=jnp.int32)
+    assert bool(np.asarray(stats[..., 0]).any())      # detected
+    assert bool(np.asarray(stats[..., 1]).any())      # repaired
+    np.testing.assert_array_equal(np.asarray(c2f), np.asarray(c2))
+
+
+def test_acc_bf16_operands_clean_verify_no_false_alarm(rs):
+    """Clean bf16 chained accumulation must not trip the detector at the
+    widened (dtype-aware) tolerance."""
+    m = k = n = 256
+    plan = ops.pick_blocks(m, k, n, carry=True, require_exact=True,
+                           vmem_budget=2 * 2 ** 20)
+    mkb = lambda sh: jnp.asarray(rs.standard_normal(sh), jnp.bfloat16)
+    a1, a2, b1, b2 = mkb((m, k)), mkb((m, k)), mkb((k, n)), mkb((k, n))
+    c0 = jnp.zeros((m, n), jnp.float32)
+    st0 = ops.acc_state_zeros(plan)
+    c1, st1, _ = ops.abft_matmul_acc(a1, b1, c0, st0, plan=plan,
+                                     backend="pallas")
+    _, _, stats = ops.abft_matmul_acc(a2, b2, c1, st1, plan=plan,
+                                      backend="pallas")
+    assert not bool(np.asarray(stats[..., 0]).any())
+    assert not bool(np.asarray(stats[..., 1]).any())
+
+
+def test_overlap_accounting_model():
+    """The overlap-aware time model: separate HBM/MXU resources, epilogue
+    exposure only where the VPU tail outruns the next tile's fetch."""
+    plan = ops.pick_blocks(512, 1024, 512)
+    for in_dtype, rate in (("float32", 34e12), ("bfloat16", 197e12),
+                           ("int8", 394e12)):
+        acct = ops.plan_accounting(plan, in_dtype=in_dtype)
+        assert acct["mxu_rate"] == rate
+        assert acct["t_total_s"] >= max(acct["t_hbm_s"], acct["t_mxu_s"])
+        assert acct["exposed_s"] >= 0.0
+        assert 0.0 <= acct["exposed_fraction"] <= 1.0
+    # the pipelined schedule can only HIDE epilogue work, never add any
+    pipe = ops.plan_accounting(plan, carry=True, pipeline=True)
+    ser = ops.plan_accounting(plan, carry=True, pipeline=False)
+    assert pipe["exposed_s"] <= ser["exposed_s"]
+    assert pipe["t_total_s"] <= ser["t_total_s"]
+    # bytes fields are untouched by the time model (cost_bytes invariant)
+    assert pipe["total_bytes"] == ser["total_bytes"]
+    assert ops.plan_accounting(plan)["total_bytes"] == plan.cost_bytes
+
+
+def test_detection_eps_dtype_table():
+    assert ops.detection_eps(jnp.float32) == float(jnp.finfo(jnp.float32).eps)
+    assert ops.detection_eps(jnp.bfloat16) == float(jnp.finfo(jnp.bfloat16).eps)
+    # integer wires verify over EXACT fp32 checksums -> fp32 eps
+    assert ops.detection_eps(jnp.int8) == float(jnp.finfo(jnp.float32).eps)
+    assert ops.detection_eps(jnp.int32) == float(jnp.finfo(jnp.float32).eps)
