@@ -61,6 +61,43 @@ def run():
     lines.append(("diskless_encode/qwen2-0.5b-smoke", f"{t_enc*1e6:.0f}",
                   f"bytes={sum(x.nbytes for x in _jax.tree.leaves(stacked))}"))
 
+    # the telemetry bus's own cost on the step path: the identical jitted
+    # step driven through the ElasticRuntime-style producer calls
+    # (set_step + span + counter) with the bus on vs off.  CI's obs-smoke
+    # job gates the delta <2% — the "cheap when idle" design constraint
+    # of repro/obs/trace.py, measured not assumed.
+    from repro import obs
+
+    cfg = smoke_config("qwen2-0.5b")
+    dc = DataConfig(cfg.vocab_size, 128, 8)
+    batch = {k: jnp.asarray(v) for k, v in synthetic_batch(dc, 0).items()}
+    opts = StepOptions(abft_mode="off", remat=False)
+    with jax.set_mesh(mesh):
+        fn, in_sh, _ = build_train_step(cfg, mesh, shape,
+                                        AdamWConfig(total_steps=10), opts)
+        state = init_state(jax.random.PRNGKey(0), cfg, opts)
+        jit_fn = jax.jit(fn, in_shardings=in_sh)
+        clock = [0]
+
+        def stepped(s, b):
+            clock[0] += 1
+            obs.set_step(clock[0])
+            with obs.span("train/step", step=clock[0]):
+                out = jit_fn(s, b)[1]["loss"]
+            obs.counter("repro_train_steps_total").inc()
+            return out
+
+        prev = obs.enabled()
+        obs.enable(False)
+        t_off = _wall(stepped, state, batch, reps=10)
+        obs.enable(True)
+        t_on = _wall(stepped, state, batch, reps=10)
+        obs.enable(prev)
+    ov = 100 * (t_on / t_off - 1.0)
+    lines.append(("train_step_obs/qwen2-0.5b-smoke", f"{t_on*1e6:.0f}",
+                  f"obs_bus_overhead={ov:+.2f}% "
+                  f"(off={t_off*1e6:.0f}us, budget <2%)"))
+
     # at-rest scrub verify: the read side of the scrubber re-runs the encode
     # against the held checksums.  Off the step critical path (it runs
     # between steps, against state the step doesn't mutate), so the row is

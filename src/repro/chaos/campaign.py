@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.chaos.faults import (Episode, FailureInjector, FaultSpace,
                                 FaultSpec, SDCInjector, SDCPlan,
                                 ensure_registered, flip_bit, get_surface)
@@ -138,6 +139,13 @@ class FaultResult:
     episode: Optional[str] = None  # episode this event belongs to (None =
     #                                standalone); episode-level rows carry
     #                                their own name here too
+    # first-trace split of recovery_latency_s: `recovery_warm_s` is the
+    # rung's wall with every program already traced (re-measured, or
+    # measured warm by construction); `recovery_compile_s` the jit/trace
+    # share of the first firing.  None = the handler could not separate
+    # (report.py then treats recovery_latency_s as compile-inclusive).
+    recovery_warm_s: Optional[float] = None
+    recovery_compile_s: Optional[float] = None
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -284,6 +292,8 @@ class CampaignRunner:
             ) -> CampaignResult:
         t0 = time.time()
         results: List[FaultResult] = []
+        bus_events: List[obs.Event] = []
+        sub = obs.subscribe(bus_events.append)
         try:
             for spec in self.space:
                 if spec.workload not in workloads:
@@ -314,6 +324,7 @@ class CampaignRunner:
             # every golden run doubles as a clean sweep: report it
             results.extend(self._clean_rows(workloads))
         finally:
+            obs.unsubscribe(sub)
             # checkpoint dirs must not outlive the sweep even on an
             # exception; recreate so the runner stays reusable
             self._serve_eng = None
@@ -321,6 +332,14 @@ class CampaignRunner:
             self._traffic_eng = None
             self._tmp.cleanup()
             self._tmp = tempfile.TemporaryDirectory(prefix="chaos-ckpt-")
+        for res in results:
+            if res.outcome == "false_alarm":
+                obs.counter("repro_false_alarms_total",
+                            "detector trips with no injected fault").inc()
+            obs.event("chaos/classified", outcome=res.outcome,
+                      spec=res.name, rung=res.rung)
+        rungs = sorted({e.name[len("recovery/"):] for e in bus_events
+                        if e.name.startswith("recovery/")})
         meta = {
             "backend": jax.default_backend(),
             "n_devices": len(jax.devices()),
@@ -331,6 +350,8 @@ class CampaignRunner:
             "n_episodes": sum(1 for ep in self.space.episodes
                               if ep.workload in workloads),
             "wall_s": time.time() - t0,
+            "obs_events": len(bus_events),
+            "obs_rungs": rungs,
         }
         return CampaignResult(space=self.space.name, results=results,
                               meta=meta)
@@ -365,18 +386,24 @@ class CampaignRunner:
             max_abs_diff=None, wall_s=0.0, spec=spec.asdict(), note=why)
 
     def _result(self, spec: FaultSpec, *, detected, corrected, rung,
-                latency, end_state, max_abs_diff, note="") -> FaultResult:
+                latency, end_state, max_abs_diff, note="",
+                warm_s=None, compile_s=None) -> FaultResult:
         s = get_surface(spec.surface)
         outcome = classify(injected=True, detected=detected,
                            corrected=corrected, end_state=end_state,
                            promise=s.promise)
+        if rung is not None and latency is not None:
+            # mirror the classification onto the bus with the same
+            # compile/warm split the FaultResult carries
+            obs.recovery(rung, latency, compile_s=compile_s, warm_s=warm_s,
+                         spec=spec.name)
         return FaultResult(
             name=spec.name, workload=spec.workload, kind=spec.kind,
             surface=spec.surface, protected=s.protected, promise=s.promise,
             outcome=outcome, detected=detected, corrected=corrected,
             rung=rung, recovery_latency_s=latency, end_state=end_state,
             max_abs_diff=max_abs_diff, wall_s=0.0, spec=spec.asdict(),
-            note=note)
+            note=note, recovery_warm_s=warm_s, recovery_compile_s=compile_s)
 
     # -- train workload -------------------------------------------------------
 
@@ -556,6 +583,8 @@ class CampaignRunner:
             spec, detected=detected, corrected=detected, rung="abft_inflight"
             if detected else None, latency=latency, end_state=end_state,
             max_abs_diff=diff,
+            # AOT-compiled drill: the measured latency IS the warm number
+            warm_s=latency, compile_s=0.0 if latency is not None else None,
             note="correction fused into the reduction; end state compared "
                  "against the clean golden run")
 
@@ -590,10 +619,26 @@ class CampaignRunner:
                 state, m = rt.train_step(i, state)
             end_state, diff = _compare_trees(_host(state), golden["final"],
                                              self.train.tol)
+            warm = None
+            if detected:
+                # warm re-measure: re-fire the identical encode->flip->
+                # scrub rollback with every program already traced — the
+                # first trip paid the jit of the recover/rollback path
+                n = self.train.steps
+                rt.checkpoint(n, state)
+                state2, _ = _flip_state_leaf(state, group, spec)
+                state2 = jax.device_put(state2, rt.gen.in_shardings[0])
+                _, rep2 = rt.scrub(n, state2)
+                if rep2 is not None and rep2.rolled_back:
+                    warm = rep2.wall_s
         finally:
             rt.close()
         return self._result(
             spec, detected=detected, corrected=detected,
+            warm_s=warm,
+            compile_s=(max(latency - warm, 0.0)
+                       if (latency is not None and warm is not None)
+                       else None),
             rung="scrub:diskless" if detected else None, latency=latency,
             end_state=end_state, max_abs_diff=diff,
             note=f"bit {spec.bit} flipped in {group} leaf {leaf_name!r} at "
@@ -698,6 +743,10 @@ class CampaignRunner:
         return self._result(
             spec, detected=fired, corrected=fired, rung=rung,
             latency=latency, end_state=end_state, max_abs_diff=diff,
+            # reshard_wall_s never includes compile: MeshGeneration
+            # measures build/compile separately (reused executables = 0)
+            warm_s=latency,
+            compile_s=rep.compile_s if rep is not None else None,
             note=note)
 
     def _train_slow_pod(self, spec: FaultSpec) -> FaultResult:
@@ -758,6 +807,8 @@ class CampaignRunner:
         return self._result(
             spec, detected=demoted, corrected=demoted, rung=rung,
             latency=latency, end_state=end_state, max_abs_diff=diff,
+            warm_s=latency,
+            compile_s=rep.compile_s if rep is not None else None,
             note=(f"EWMA tripped at step {trip_step} "
                   f"(threshold {policy.slow_pod_threshold}x, warmup "
                   f"{policy.straggler_warmup}); demoted pod via lose_pod"
@@ -876,12 +927,26 @@ class CampaignRunner:
         wall = time.perf_counter() - t0
         detected = bool(np.asarray(stats[..., 0]).any())
         repaired = bool(np.asarray(stats[..., 1]).any())
+        warm = None
+        if repaired:
+            # re-fire the identical repair with the program already traced:
+            # the second wall is the warm repair cost, the first includes
+            # the jit trace/compile of the locate-and-rewrite path
+            t0 = time.perf_counter()
+            c2w, _, _ = ops.abft_matmul_acc(a2, b2, c1_bad, st1, plan=plan,
+                                            backend="jnp",
+                                            out_dtype=out_dtype)
+            jax.block_until_ready(c2w)
+            warm = time.perf_counter() - t0
         tol = 0.0 if tag == "int8" else self.train.tol
         end_state, diff = _compare_trees(_host(c2f), _host(c2), tol)
         return self._dtype_surface(spec, self._result(
             spec, detected=detected, corrected=repaired,
             rung="kernel:masked_recompute" if repaired else None,
             latency=wall if repaired else None,
+            warm_s=warm,
+            compile_s=(max(wall - warm, 0.0)
+                       if repaired and warm is not None else None),
             end_state=end_state, max_abs_diff=diff,
             note=f"[{tag}] bit {spec.bit} flip in carried data ({r_i},"
                  f"{c_i}): both residual families trip -> located and "
@@ -1057,10 +1122,14 @@ class CampaignRunner:
                 e.corrected for e in st.events)
             end_state = ("bit_identical" if outputs == golden["outputs"]
                          else "diverged")
+            lat = st.recovery_latency_s() if detected else None
             return self._result(
                 spec, detected=detected, corrected=corrected,
                 rung="abft_inflight" if detected else None,
-                latency=st.recovery_latency_s() if detected else None,
+                latency=lat,
+                # the engine is warmed before the drill, so the marginal
+                # drill-step wall is already compile-free
+                warm_s=lat, compile_s=0.0 if lat is not None else None,
                 end_state=end_state,
                 max_abs_diff=0.0 if end_state == "bit_identical" else None,
                 note=f"{st.detections} detection(s) in "
@@ -1095,10 +1164,31 @@ class CampaignRunner:
                         else "scrub:restore")
             end_state = ("bit_identical" if outputs == golden["outputs"]
                          else "diverged")
+            latency = (sum(e.wall_s for e in evs) / len(evs)
+                       if evs else None)
+            warm = None
+            if detected and corrected:
+                # re-flip the same leaf and re-run the scrub with every
+                # verify/repair program already traced: the repair rewrites
+                # the leaf back, so the shared engine stays clean
+                try:
+                    _, undo2 = _flip_engine_bit(eng, spec)
+                    n0 = len(st.scrub_events)
+                    eng._scrub_check()
+                    evs2 = [e for e in st.scrub_events[n0:] if e.repaired]
+                    if evs2:
+                        warm = sum(e.wall_s for e in evs2) / len(evs2)
+                    else:
+                        undo2()
+                except Exception:
+                    warm = None
             return self._result(
                 spec, detected=detected, corrected=corrected, rung=rung,
-                latency=(sum(e.wall_s for e in evs) / len(evs)
-                         if evs else None),
+                latency=latency,
+                warm_s=warm,
+                compile_s=(max(latency - warm, 0.0)
+                           if latency is not None and warm is not None
+                           else None),
                 end_state=end_state,
                 max_abs_diff=0.0 if end_state == "bit_identical" else None,
                 note=f"bit {spec.bit} flipped in {fired.get('leaf')!r} at "
@@ -1188,10 +1278,12 @@ class CampaignRunner:
                 e.corrected for e in st.events)
             end_state = ("bit_identical"
                          if rep.outputs == golden["outputs"] else "diverged")
+            lat = st.recovery_latency_s() if detected else None
             return self._result(
                 spec, detected=detected, corrected=corrected,
                 rung="abft_inflight" if detected else None,
-                latency=st.recovery_latency_s() if detected else None,
+                latency=lat,
+                warm_s=lat, compile_s=0.0 if lat is not None else None,
                 end_state=end_state,
                 max_abs_diff=0.0 if end_state == "bit_identical" else None,
                 note=f"{st.detections} detection(s) over {st.decode_steps} "
@@ -1238,11 +1330,44 @@ class CampaignRunner:
             end_state = ("bit_identical"
                          if rep.outputs == golden["outputs"] else "diverged")
             pages = sorted({e.page for e in evs if e.page >= 0})
+            latency = (sum(e.wall_s for e in evs) / len(evs)
+                       if evs else None)
+            warm = None
+            if detected and corrected:
+                # warm re-measure with the verify/repair programs traced:
+                # the paged repair rewrites the page, the param repair the
+                # leaf, so the cached traffic engine stays clean
+                try:
+                    if spec.kind == "dram_kv_cache":
+                        kv = eng.kv
+                        live = kv.live_pages()
+                        if live:
+                            key = sorted(kv.pools)[spec.seed % len(kv.pools)]
+                            kv.corrupt_page(key, live[0], bit=spec.bit)
+                            t0 = time.perf_counter()
+                            if kv.scrub():
+                                warm = time.perf_counter() - t0
+                    else:
+                        _, undo2 = _flip_engine_bit(eng, spec)
+                        n0 = len(st.scrub_events)
+                        eng._scrub_check()
+                        evs2 = [e for e in st.scrub_events[n0:]
+                                if e.repaired and e.domain != "kv"]
+                        if evs2:
+                            warm = (sum(e.wall_s for e in evs2)
+                                    / len(evs2))
+                        else:
+                            undo2()
+                except Exception:
+                    warm = None
             return self._result(
                 spec, detected=detected, corrected=corrected,
                 rung=rung if detected else None,
-                latency=(sum(e.wall_s for e in evs) / len(evs)
-                         if evs else None),
+                latency=latency,
+                warm_s=warm,
+                compile_s=(max(latency - warm, 0.0)
+                           if latency is not None and warm is not None
+                           else None),
                 end_state=end_state,
                 max_abs_diff=0.0 if end_state == "bit_identical" else None,
                 note=f"bit {spec.bit} flipped in {fired.get('leaf')!r} at "

@@ -36,6 +36,23 @@ def _latency_stats(lats: List[float]) -> Dict[str, float]:
             "max_s": max(lats)}
 
 
+def _warm_stats(rows) -> dict:
+    """Compile/warm split of the recovery walls (PR10): ``warm`` is the
+    steady-state repair cost with every program already traced; the
+    difference to the raw latency is jit trace/compile, reported once as
+    ``compile`` so a first-trace wall can't masquerade as MTTR."""
+    warms = [r.recovery_warm_s for r in rows
+             if getattr(r, "recovery_warm_s", None) is not None]
+    compiles = [r.recovery_compile_s for r in rows
+                if getattr(r, "recovery_compile_s", None) is not None]
+    out = {}
+    if warms:
+        out["warm"] = _latency_stats(warms)
+    if compiles:
+        out["compile"] = _latency_stats(compiles)
+    return out
+
+
 def coverage_matrix(results) -> dict:
     """``{kind: {surface: {outcome counts, workloads, rungs, latency}}}``.
 
@@ -56,10 +73,18 @@ def coverage_matrix(results) -> dict:
             cell["rungs"].append(r.rung)
         if r.recovery_latency_s is not None:
             cell["recovery_latency"].append(r.recovery_latency_s)
+        if getattr(r, "recovery_warm_s", None) is not None:
+            cell.setdefault("_warm", []).append(r.recovery_warm_s)
+        if getattr(r, "recovery_compile_s", None) is not None:
+            cell.setdefault("_compile", []).append(r.recovery_compile_s)
     for kind in matrix.values():
         for cell in kind.values():
             cell["recovery_latency"] = _latency_stats(
                 cell.pop("recovery_latency"))
+            cell["recovery_latency_warm"] = _latency_stats(
+                cell.pop("_warm", []))
+            cell["recovery_compile"] = _latency_stats(
+                cell.pop("_compile", []))
     return matrix
 
 
@@ -181,6 +206,14 @@ def _fmt_lat(cell) -> str:
     st = cell["recovery_latency"]
     if not st:
         return "—"
+    warm = cell.get("recovery_latency_warm") or {}
+    comp = cell.get("recovery_compile") or {}
+    if warm:
+        # warm MTTR first-class; a non-trivial compile share is broken out
+        s = f"{warm['mean_s'] * 1e3:.1f}ms warm"
+        if comp and comp["mean_s"] > 1e-4:
+            s += f" (+{comp['mean_s'] * 1e3:.1f}ms compile)"
+        return s
     return f"{st['mean_s'] * 1e3:.1f}ms"
 
 

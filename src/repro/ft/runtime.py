@@ -42,11 +42,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import weakref
 from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.chaos.faults import register_surface
 from repro.ckpt.diskless import DisklessCheckpoint
 from repro.ft.failures import FailureInjector, SDCInjector
@@ -141,6 +143,20 @@ def unstack_view(stacked, like):
     return jax.tree.map(unstack, stacked, like)
 
 
+def _pub_rung(rung: str, wall_s: float, step: Optional[int] = None,
+              compile_s: Optional[float] = None,
+              warm_s: Optional[float] = None, **attrs) -> None:
+    """Publish one recovery-ladder firing to the obs bus: the
+    ``repro_recoveries_total{rung=...}`` counter plus a ``recovery/<rung>``
+    span carrying the measured wall (and the compile/warm split when the
+    caller has it — `MeshGeneration` measures compile separately, so the
+    elastic rungs always do)."""
+    obs.counter("repro_recoveries_total",
+                "recovery-ladder rungs fired").inc(rung=rung)
+    obs.recovery(rung, wall_s, step=step, compile_s=compile_s,
+                 warm_s=warm_s, **attrs)
+
+
 class FTRuntime:
     """Wraps a step function with detection/recovery (single-host substrate:
     the DP axis is the stacked leading dim of the replicated state views)."""
@@ -224,6 +240,9 @@ class FTRuntime:
             # whether it was merely detected or also repaired is the step's
             # abft_reduce mode, visible in metrics["abft_ok"]
             self.recoveries["sdc"] += 1
+            obs.event("fault/inject", step=step_idx,
+                      surface="train.step/grad_reduce", kind="sdc_reduce",
+                      n=len(sdc))
             out = run_step_sdc(state, sdc[0] if len(sdc) == 1 else sdc)
         else:
             out = run_step(state)
@@ -234,11 +253,17 @@ class FTRuntime:
         """Diskless first (paper's path), disk as fallback."""
         if self.diskless.step is not None and len(failed) <= self.policy.f:
             self.recoveries["diskless"] += 1
-            return self.diskless.recover(damaged_state, failed)
+            t0 = time.time()
+            out = self.diskless.recover(damaged_state, failed)
+            _pub_rung("diskless", time.time() - t0, shards=len(failed))
+            return out
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
             self.recoveries["disk"] += 1
             latest = self.ckpt.latest_step()
-            return self.ckpt.restore(latest, damaged_state)
+            t0 = time.time()
+            out = self.ckpt.restore(latest, damaged_state)
+            _pub_rung("disk", time.time() - t0, rollback_step=latest)
+            return out
         raise RuntimeError(
             f"unrecoverable: {len(failed)} failures, capacity f="
             f"{self.policy.f}, no disk checkpoint")
@@ -398,6 +423,36 @@ class ElasticRuntime(FTRuntime):
         # kind="slow_pod"); None = synthesize a uniform heartbeat
         self.pod_heartbeat = None
         self._straggler = self._fresh_straggler(gen.mesh)
+        self._obs_id = id(self)
+        self._attach_straggler()
+
+    def _attach_straggler(self):
+        """Attach the straggler detector through the bus: `train_step`
+        publishes each step's per-pod walls as a ``train/pod_walls`` event
+        and the detector consumes them via ``obs.subscribe`` — the
+        callback seam the ROADMAP trainer-shell item asks for.  The
+        subscription holds only a weakref to the runtime; a dropped
+        runtime detaches itself on its next event."""
+        wr = weakref.ref(self)
+
+        def _feed(ev, _wr=wr):
+            rt = _wr()
+            if rt is None:
+                obs.unsubscribe(_feed)
+                return
+            if (ev.name != "train/pod_walls"
+                    or ev.attrs.get("runtime") != rt._obs_id):
+                return
+            slow = rt._straggler.observe(list(ev.attrs["walls"]))
+            rt._slow_pod = slow
+            if slow is not None:
+                obs.counter("repro_straggler_trips_total",
+                            "EWMA straggler detector trips").inc()
+                obs.event("straggler/trip", step=ev.step, pod=slow,
+                          ewma=list(rt._straggler.ewma))
+
+        self._obs_sub = _feed
+        obs.subscribe(_feed)
 
     # -- generation lifecycle ------------------------------------------------
 
@@ -478,14 +533,20 @@ class ElasticRuntime(FTRuntime):
         per-pod heartbeat into the straggler detector; poll
         `maybe_straggler()` after the step and demote via `demote_pod`."""
         batch = self.place_batch(step_idx)
-        t0 = time.time()
-        state, metrics = self.gen.step_fn(state, batch)
-        wall = time.time() - t0
+        obs.set_step(step_idx)
+        with obs.span("train/step", step=step_idx, gen=self.gen.gen):
+            t0 = time.time()
+            state, metrics = self.gen.step_fn(state, batch)
+            wall = time.time() - t0
         self.step_times.append(wall)
+        obs.counter("repro_train_steps_total", "elastic train steps").inc()
         n_pods = self._straggler.n_pods
         walls = (self.pod_heartbeat(step_idx, wall)
                  if self.pod_heartbeat is not None else [wall] * n_pods)
-        self._slow_pod = self._straggler.observe(walls)
+        # the straggler detector consumes this through obs.subscribe
+        # (`_attach_straggler`) — the on_step hook seam, done as the bus
+        obs.event("train/pod_walls", step=step_idx, walls=list(walls),
+                  runtime=self._obs_id)
         return state, metrics
 
     def maybe_straggler(self) -> Optional[int]:
@@ -504,6 +565,9 @@ class ElasticRuntime(FTRuntime):
         state, rollback, report = self.lose_pod(state)
         self.recoveries["demote"] += 1
         self._slow_pod = None
+        _pub_rung("demote:" + report.restore_path, report.reshard_wall_s,
+                  compile_s=report.compile_s,
+                  warm_s=report.reshard_wall_s, pod=pod)
         return state, rollback, report
 
     def checkpoint(self, step: int, state):
@@ -545,10 +609,20 @@ class ElasticRuntime(FTRuntime):
         if ok:
             return state, None
         self.recoveries["scrub"] = self.recoveries.get("scrub", 0) + 1
+        obs.counter("repro_detections_total",
+                    "checksum/invariant trips").inc(
+            surface="state.at_rest")
+        obs.event("fault/detect", step=step, surface="state.at_rest",
+                  detector="diskless_verify", leaf=str(leaf))
+        obs.histogram("repro_scrub_residual",
+                      "at-rest scrub checksum residuals").observe(
+            float(resid))
         restored = unstack_view(self.diskless.recover(stacked, []), state)
         state = jax.device_put(restored, self.gen.in_shardings[0])
         report = ScrubReport(step=step, leaf=leaf, residual=resid,
                              wall_s=time.time() - t0, rolled_back=True)
+        _pub_rung("scrub:diskless", report.wall_s, step=step,
+                  leaf=str(leaf), residual=float(resid))
         return state, report
 
     # -- rung 2: same-topology shard loss ------------------------------------
@@ -566,6 +640,9 @@ class ElasticRuntime(FTRuntime):
         failed = self._failed_shards(step)
         if not failed:
             return state, None
+        obs.event("fault/detect", step=step, surface="ft.runtime/shards",
+                  detector="failure_signal", shards=len(failed))
+        t0 = time.time()
         if self.diskless.step is not None and len(failed) <= self.policy.f:
             stacked = stack_view(state, self.p)
             for shard in failed:
@@ -574,14 +651,19 @@ class ElasticRuntime(FTRuntime):
             stacked = self.diskless.recover(stacked, failed)
             state = unstack_view(stacked, state)
             rollback = self.diskless.step
+            rung = "diskless"
         elif self.ckpt is not None and self.ckpt.latest_step() is not None:
             self.recoveries["disk"] += 1
             rollback = self.ckpt.latest_step()
             state = self.ckpt.restore(rollback, self.gen.state_shapes)
+            rung = "disk"
         else:
             raise RuntimeError(
                 "shard loss with no diskless encode and no disk checkpoint")
-        return jax.device_put(state, self.gen.in_shardings[0]), rollback
+        state = jax.device_put(state, self.gen.in_shardings[0])
+        _pub_rung(rung, time.time() - t0, step=step, shards=len(failed),
+                  rollback_step=rollback)
+        return state, rollback
 
     # -- rung 3: topology change ---------------------------------------------
 
@@ -647,6 +729,9 @@ class ElasticRuntime(FTRuntime):
             reshard_wall_s=reshard_wall, build_s=gen.build_s,
             compile_s=gen.compile_s, reused_executable=gen.reused)
         self.reports.append(report)
+        _pub_rung("elastic:" + path, reshard_wall, compile_s=gen.compile_s,
+                  warm_s=reshard_wall, gen_to=gen.gen,
+                  rollback_step=rollback, reused=gen.reused)
         return state, rollback, report
 
     def regrow(self, state, mesh=None, at_step: Optional[int] = None):
@@ -682,7 +767,12 @@ class ElasticRuntime(FTRuntime):
             reshard_wall_s=reshard_wall, build_s=gen.build_s,
             compile_s=gen.compile_s, reused_executable=gen.reused)
         self.reports.append(report)
+        _pub_rung("elastic:live", reshard_wall, compile_s=gen.compile_s,
+                  warm_s=reshard_wall, gen_to=gen.gen, reused=gen.reused)
         return state, report
 
     def close(self):
+        if getattr(self, "_obs_sub", None) is not None:
+            obs.unsubscribe(self._obs_sub)
+            self._obs_sub = None
         self.pipe.close()

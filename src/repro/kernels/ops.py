@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.chaos.faults import register_surface
 from repro.kernels import ref
 from repro.kernels.abft_matmul import (STATS_WIDTH, abft_matmul_acc_pallas,
@@ -452,8 +453,17 @@ def abft_matmul(
         from repro.kernels import autotune  # lazy: autotune imports ops
         plan = autotune.best_plan(m, k, n, in_dtype=a.dtype,
                                   out_dtype=out_dtype, f=f)
-    if plan is not None and (on_tpu() or force_pallas) \
-            and plan.waste <= max_waste:
+    use_pallas = (plan is not None and (on_tpu() or force_pallas)
+                  and plan.waste <= max_waste)
+    # dispatch runs at trace time, so this counts TRACES (≈ compiles) per
+    # backend — the first-trace side of the obs compile/warm split
+    obs.counter("repro_kernel_traces_total",
+                "kernel dispatcher traces (≈ compiles)").inc(
+        op="abft_matmul", backend="pallas" if use_pallas else "ref")
+    obs.event("kernel/trace", op="abft_matmul",
+              backend="pallas" if use_pallas else "ref",
+              m=m, k=k, n=n, dtype=str(jnp.dtype(a.dtype)))
+    if use_pallas:
         return _fused_mm(plan, jnp.dtype(out_dtype), not on_tpu(),
                          a, b, wm, wn)
     return ref.abft_matmul_ref(a, b, wm, wn, out_dtype=out_dtype)
@@ -676,6 +686,12 @@ def abft_matmul_acc(
     c_p = _pad2(c_in, plan.pm, plan.pn)
     ccol_in, crow_in = state
     use_pallas = backend == "pallas" or (backend == "auto" and on_tpu())
+    obs.counter("repro_kernel_traces_total",
+                "kernel dispatcher traces (≈ compiles)").inc(
+        op="abft_matmul_acc", backend="pallas" if use_pallas else "jnp")
+    obs.event("kernel/trace", op="abft_matmul_acc",
+              backend="pallas" if use_pallas else "jnp",
+              m=m, n=n, verify=verify, dtype=str(jnp.dtype(a.dtype)))
     if use_pallas:
         interpret = not on_tpu() if interpret is None else interpret
         c, ccol, crow, stats = abft_matmul_acc_pallas(

@@ -1,0 +1,51 @@
+"""``repro.obs`` — the unified FT telemetry bus.
+
+One process-global seam for traces (:mod:`repro.obs.trace`), metrics
+(:mod:`repro.obs.metrics`) and exporters (:mod:`repro.obs.export`):
+
+    from repro import obs
+
+    with obs.span("train/step", step=i):
+        ...                                   # hierarchical, exception-safe
+    obs.event("fault/detect", step=i, surface="serve.engine/logits_reduce")
+    obs.recovery("scrub:page_repair", wall_s, warm_s=warm)   # rung MTTR
+    obs.counter("repro_detections_total").inc()
+    obs.subscribe(on_event)                   # chaos / straggler attach here
+
+``python -m repro.launch.obs record`` drives a drilled traffic run with
+the bus on and emits the committed ``OBS_PR10.json`` lifecycle artifact;
+``render`` regenerates Perfetto/Prometheus views from any recorded JSONL
+log.  See ``docs/observability.md`` for the event taxonomy and clock
+semantics.
+"""
+from repro.obs.trace import (            # noqa: F401
+    Event, Tracer, TRACER,
+    span, event, stamp, recovery,
+    subscribe, unsubscribe, enable, enabled,
+    set_step, current_step, reset, events, dropped,
+    rung_timeline, lifecycles, percentile,
+)
+from repro.obs.metrics import (          # noqa: F401
+    Counter, Gauge, Histogram, Registry, REGISTRY,
+    counter, gauge, histogram, snapshot,
+)
+from repro.obs import export             # noqa: F401
+
+__all__ = [
+    "Event", "Tracer", "TRACER",
+    "span", "event", "stamp", "recovery",
+    "subscribe", "unsubscribe", "enable", "enabled",
+    "set_step", "current_step", "reset", "events", "dropped",
+    "rung_timeline", "lifecycles", "percentile",
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "counter", "gauge", "histogram", "snapshot",
+    "export", "reset_all",
+]
+
+
+def reset_all() -> None:
+    """Fresh-run semantics: clear the trace buffer AND the metrics
+    registry (subscribers and the enabled flag survive)."""
+    from repro.obs import metrics
+    reset()
+    metrics.reset()

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.chaos.faults import SDCInjector, register_surface, scatter_delta
 from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
@@ -469,13 +470,33 @@ class ServeEngine:
         events: List[ScrubEvent] = []
         self._scrub_kv(step, events)
         self._scrub_params(step, events)
+        wall = time.perf_counter() - t0
+        obs.histogram("repro_checksum_verify_seconds",
+                      "at-rest scrub verify+repair wall").observe(
+            wall, domain="serve")
         if events:
-            wall = time.perf_counter() - t0
             for e in events:
                 e.wall_s = wall
             self.stats.detections += len(events)
             self.stats.corrections += sum(1 for e in events if e.repaired)
             self.stats.scrub_events.extend(events)
+            det = obs.counter("repro_detections_total",
+                              "checksum/invariant trips")
+            rep = obs.counter("repro_scrub_repairs_total",
+                              "at-rest scrub repairs")
+            for e in events:
+                rung = ("scrub:page_repair" if e.page >= 0 else
+                        "scrub:kv_repair" if e.domain == "kv" else
+                        "scrub:restore")
+                det.inc(surface="serve.scrub/" + e.domain)
+                obs.event("fault/detect", step=step,
+                          surface="serve.scrub/" + e.domain,
+                          detector="fingerprint", leaf=e.leaf,
+                          slot=e.slot, page=e.page)
+                if e.repaired:
+                    rep.inc(domain=e.domain)
+                    obs.recovery(rung, wall, step=step, leaf=e.leaf,
+                                 slot=e.slot, page=e.page)
 
     def _scrub_kv(self, step: int, events: List[ScrubEvent]):
         """A tripped KV slot is rebuilt by the erasure solve
@@ -693,8 +714,12 @@ class ServeEngine:
         wall = time.perf_counter() - t0
 
         detected = self._protected and not bool(ok)
+        step = self.stats.decode_steps
         self.stats.decode_steps += 1
         self.stats.decode_s += wall
+        if not self._warming:
+            obs.counter("repro_decode_steps_total",
+                        "engine decode steps").inc()
         if detected:
             self.stats.detections += 1
             if bool(info["corrected"]):
@@ -708,8 +733,27 @@ class ServeEngine:
             ev.recovery_s = max(wall - base, 0.0) if base else 0.0
             self.stats.drilled_step_s.append(wall)
             self.stats.events.append(ev)
+            obs.event("fault/inject", step=step,
+                      surface="serve.engine/logits_reduce",
+                      kind="sdc_reduce", shard=ev.shard, delta=ev.delta)
         else:
             self.stats.decode_step_s.append(wall)
+        if detected:
+            obs.counter("repro_detections_total",
+                        "checksum/invariant trips").inc(
+                surface="serve.engine/logits_reduce")
+            obs.event("fault/detect", step=step,
+                      surface="serve.engine/logits_reduce",
+                      detector="abft_psum",
+                      row=int(info["row"]), col=int(info["col"]))
+            if bool(info["corrected"]):
+                obs.counter("repro_corrections_total",
+                            "in-flight ABFT corrections").inc()
+            rec = ev.recovery_s if ev is not None else wall
+            # the correct-path lives inside the already-traced decode
+            # program, so even the first detection's wall is compile-free
+            obs.recovery("abft_inflight", rec, step=step, warm_s=rec,
+                         compile_s=0.0, corrected=bool(info["corrected"]))
         self._post_decode()
 
         self.pos = self.pos + jnp.asarray(
@@ -728,8 +772,15 @@ class ServeEngine:
                 req.t_done = now
                 if req.ttft_s is not None:
                     self.stats.ttft_s.append(req.ttft_s)
+                    obs.histogram("repro_ttft_seconds",
+                                  "time to first token").observe(req.ttft_s)
                 if req.decode_tok_s is not None:
                     self.stats.tok_s.append(req.decode_tok_s)
+                    obs.gauge("repro_tokens_per_s",
+                              "per-request decode throughput").set(
+                        req.decode_tok_s)
+                obs.counter("repro_requests_total",
+                            "retired serve requests").inc()
                 finished.append(req)
                 self._retire_slot(s)
                 self.active[s] = None

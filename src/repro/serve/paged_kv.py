@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.chaos.faults import register_surface
 
 __all__ = ["PagedKVCache", "PagedStats"]
@@ -213,8 +214,12 @@ class PagedKVCache:
             _, shared = self._prefix_lookup(prompt)
             if shared:
                 self.stats.prefix_hits += 1
+                obs.counter("repro_prefix_hits_total",
+                            "prefix-cache page-share hits").inc()
             else:
                 self.stats.prefix_misses += 1
+                obs.counter("repro_prefix_misses_total",
+                            "prefix-cache lookup misses").inc()
         need_len = min(need_len, self.max_len)
         n_logical = -(-need_len // self.page_size)  # ceil
         for i, phys in enumerate(shared[:n_logical]):
@@ -379,6 +384,8 @@ class PagedKVCache:
         self.last_rearmed.append((key, phys))
         self.stats.checksum_rearms += 1
         self.stats.repairs += 1
+        obs.counter("repro_page_repairs_total",
+                    "paged-KV erasure page rebuilds").inc()
         return True
 
     def scrub(self) -> List[Tuple[str, int]]:

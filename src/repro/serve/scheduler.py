@@ -34,6 +34,8 @@ import dataclasses
 import time
 from typing import Callable, List, Optional
 
+from repro import obs
+
 __all__ = ["SchedPolicy", "SchedStats", "SLOScheduler"]
 
 
@@ -94,12 +96,19 @@ class SLOScheduler:
     def submit(self, req, priority: Optional[int] = None) -> bool:
         """Queue ``req``; False = rejected by admission control."""
         self.stats.submitted += 1
+        obs.counter("repro_sched_submitted_total",
+                    "requests offered to the scheduler").inc()
         if self.policy.max_queue and len(self._items) >= self.policy.max_queue:
             self.stats.rejected += 1
+            obs.counter("repro_sched_rejected_total",
+                        "admission-control rejections").inc()
+            obs.event("sched/reject", queue_depth=len(self._items))
             return False
         self._items.append(_Entry(req, self._clamp(priority),
                                   self.clock(), self._seq))
         self._seq += 1
+        obs.gauge("repro_queue_depth",
+                  "scheduler queue depth").set(len(self._items))
         return True
 
     def effective_priority(self, entry: _Entry, now: float) -> int:
@@ -129,4 +138,10 @@ class SLOScheduler:
         self.stats.popped += 1
         self.stats.waits_s.append(wait)
         self.stats.max_wait_s = max(self.stats.max_wait_s, wait)
+        obs.counter("repro_sched_popped_total",
+                    "requests admitted from the queue").inc()
+        obs.histogram("repro_queue_wait_seconds",
+                      "queue wait from submit to admission").observe(wait)
+        obs.gauge("repro_queue_depth",
+                  "scheduler queue depth").set(len(self._items))
         return e.req

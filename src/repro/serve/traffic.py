@@ -25,6 +25,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["TrafficConfig", "TraceItem", "make_trace", "run_trace",
            "TrafficReport", "compare"]
 
@@ -148,17 +150,18 @@ def run_trace(engine, trace: List[TraceItem], *,
             on_step(eng, step)
 
     finished = []
-    t0 = time.perf_counter()
-    while True:
-        _submit_due(engine)
-        finished += engine.run(max_steps=max_steps, on_step=hook)
-        if i >= n:
-            break
-        # the engine drained before the next open-loop arrival was due:
-        # idle time passes instantly, the arrival clock jumps forward
-        engine.stats.decode_steps = max(engine.stats.decode_steps,
-                                        items[i].arrive_step)
-    wall = time.perf_counter() - t0
+    with obs.span("serve/run_trace", n_requests=n):
+        t0 = time.perf_counter()
+        while True:
+            _submit_due(engine)
+            finished += engine.run(max_steps=max_steps, on_step=hook)
+            if i >= n:
+                break
+            # the engine drained before the next open-loop arrival was due:
+            # idle time passes instantly, the arrival clock jumps forward
+            engine.stats.decode_steps = max(engine.stats.decode_steps,
+                                            items[i].arrive_step)
+        wall = time.perf_counter() - t0
 
     s = engine.stats
     rejected = list(getattr(engine, "rejected", []))

@@ -1,0 +1,90 @@
+"""tools/bench_trajectory.py: strict merge of committed artifacts.
+
+The tool's one job is to make trends visible without ever silently
+mangling a row — so the tests drive the strictness guarantees (duplicate
+JSON keys inside an artifact, duplicate metric cells across extractors,
+non-numeric values, unknown schemas are all hard errors) and the happy
+path over the three committed artifact schemas.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_trajectory",
+    Path(__file__).resolve().parent.parent / "tools" / "bench_trajectory.py")
+traj = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(traj)
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return p
+
+
+def test_merges_all_three_schemas_in_pr_order(tmp_path):
+    _write(tmp_path, "BENCH_PR2.json",
+           {"k/a": {"us": "10", "derived": ""},
+            "k/b": {"us": "2.5|9.0", "derived": "p50|p99"}})
+    _write(tmp_path, "CAMPAIGN_PR7.json",
+           {"schema": "repro.chaos.campaign/v2",
+            "summary": {"n_events": 98,
+                        "by_outcome": {"corrected": 86, "missed": 0}},
+            "meta": {"wall_s": 199.0}})
+    _write(tmp_path, "OBS_PR10.json",
+           {"schema": "repro.obs.pr10/v1", "n_events": 17,
+            "n_complete_lifecycles": 4, "dropped_events": 0,
+            "overhead": {"overhead_pct": 0.5},
+            "rung_timeline": {"abft_inflight":
+                              {"warm": {"mean_s": 0.0002}}}})
+    cols, table = traj.collect(tmp_path)
+    assert cols == ["BENCH_PR2", "CAMPAIGN_PR7", "OBS_PR10"]
+    assert table["k/a/us"]["BENCH_PR2"] == 10.0
+    assert table["k/b/us"]["BENCH_PR2"] == 2.5      # first component
+    assert table["chaos/outcome/missed"]["CAMPAIGN_PR7"] == 0.0
+    assert table["obs/complete_lifecycles"]["OBS_PR10"] == 4.0
+    assert table["obs/rung/abft_inflight/warm_mean_ms"]["OBS_PR10"] == \
+        pytest.approx(0.2)
+    md = traj.render(cols, table)
+    assert "| chaos/wall_s | — | 199 | — |" in md
+
+
+def test_duplicate_json_keys_are_fatal(tmp_path):
+    p = tmp_path / "BENCH_PR3.json"
+    p.write_text('{"row": {"us": "1"}, "row": {"us": "2"}}')
+    with pytest.raises(SystemExit, match="duplicate JSON key"):
+        traj.collect(tmp_path)
+
+
+def test_non_numeric_value_is_fatal(tmp_path):
+    _write(tmp_path, "BENCH_PR4.json", {"row": {"us": "not-a-number"}})
+    with pytest.raises(SystemExit, match="non-numeric"):
+        traj.collect(tmp_path)
+
+
+def test_unknown_schema_is_fatal(tmp_path):
+    _write(tmp_path, "BENCH_PR5.json",
+           {"schema": "mystery/v1", "rows": []})
+    with pytest.raises(SystemExit, match="unknown schema"):
+        traj.collect(tmp_path)
+
+
+def test_malformed_row_cell_is_fatal(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", {"row": [1, 2, 3]})
+    with pytest.raises(SystemExit, match="not a benchmark cell"):
+        traj.collect(tmp_path)
+
+
+def test_empty_dir_is_fatal(tmp_path):
+    with pytest.raises(SystemExit, match="no artifacts"):
+        traj.collect(tmp_path)
+
+
+def test_committed_artifacts_still_merge():
+    root = Path(__file__).resolve().parent.parent
+    cols, table = traj.collect(root)
+    assert any(c.startswith("BENCH_PR") for c in cols)
+    assert table                                    # non-empty

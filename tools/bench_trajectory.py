@@ -1,0 +1,212 @@
+"""Merge the committed benchmark/campaign artifacts into one trend table.
+
+Every PR commits a machine-readable artifact (``BENCH_PR*.json`` from
+`benchmarks/run.py` / `benchmarks/bench_traffic.py`, ``CAMPAIGN_PR*.json``
+from `repro.launch.chaos`, ``OBS_PR*.json`` from `repro.launch.obs`).
+This tool folds them all into a per-metric trajectory — one row per
+metric, one column per artifact in PR order — so a perf regression or a
+coverage drop between PRs is a visible kink in a table instead of a diff
+between two JSON blobs.
+
+Strict by construction: a malformed artifact (unknown schema, non-numeric
+value, duplicate JSON keys — which ``json.load`` would silently collapse)
+or two artifacts claiming the same (artifact, metric) cell is a hard
+error, not a skipped row.
+
+  PYTHONPATH=src python tools/bench_trajectory.py           # repo root
+  PYTHONPATH=src python tools/bench_trajectory.py --dir . --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+
+class TrajectoryError(SystemExit):
+    """Malformed artifact — always fatal (exit code 2)."""
+
+    def __init__(self, msg: str):
+        super().__init__(f"bench_trajectory: {msg}")
+
+
+def _no_dup_pairs(pairs):
+    d = {}
+    for k, v in pairs:
+        if k in d:
+            raise ValueError(f"duplicate JSON key {k!r}")
+        d[k] = v
+    return d
+
+
+def load_artifact(path: Path) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh, object_pairs_hook=_no_dup_pairs)
+    except ValueError as e:   # includes JSONDecodeError + duplicate keys
+        raise TrajectoryError(f"{path.name}: {e}")
+
+
+def _num(path: Path, metric: str, v) -> float:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        raise TrajectoryError(
+            f"{path.name}: metric {metric!r} has non-numeric value {v!r}")
+
+
+# -- per-schema extractors: artifact dict -> {metric: value} --------------
+
+def _rows_run(path: Path, d: dict) -> Dict[str, float]:
+    """`benchmarks/run.py` dump: ``{name: {"us": ..., "derived": ...}}``."""
+    rows = {}
+    for name, cell in d.items():
+        if not (isinstance(cell, dict) and "us" in cell):
+            raise TrajectoryError(
+                f"{path.name}: row {name!r} is not a benchmark cell")
+        us = cell["us"]
+        if isinstance(us, str) and "|" in us:
+            # multi-value rows ("p50|p99") track their first component
+            us = us.split("|", 1)[0]
+        rows[name + "/us"] = _num(path, name, us)
+    return rows
+
+
+def _rows_traffic(path: Path, d: dict) -> Dict[str, float]:
+    p = "traffic/"
+    rows = {}
+    for tag in ("open_clean", "open_fault", "closed_clean"):
+        rep = d.get(tag) or {}
+        for k in ("tok_per_s", "p50_ttft_ms", "p99_ttft_ms"):
+            if k in rep:
+                rows[f"{p}{tag}/{k}"] = _num(path, k, rep[k])
+    slo = d.get("slo_under_fault") or {}
+    for k in ("p99_ttft_degradation_pct", "faults_injected",
+              "faults_missed"):
+        if k in slo:
+            rows[p + k] = _num(path, k, slo[k])
+    st = d.get("scheduler_stress") or {}
+    if "pops_per_s" in st:
+        rows[p + "scheduler/pops_per_s"] = _num(path, "pops_per_s",
+                                                st["pops_per_s"])
+    return rows
+
+
+def _rows_campaign(path: Path, d: dict) -> Dict[str, float]:
+    p = "chaos/"
+    summ = d.get("summary") or {}
+    rows = {p + "n_events": _num(path, "n_events",
+                                 summ.get("n_events", 0))}
+    for o, n in (summ.get("by_outcome") or {}).items():
+        rows[p + "outcome/" + o] = _num(path, o, n)
+    wall = (d.get("meta") or {}).get("wall_s")
+    if wall is not None:
+        rows[p + "wall_s"] = _num(path, "wall_s", wall)
+    return rows
+
+
+def _rows_obs(path: Path, d: dict) -> Dict[str, float]:
+    p = "obs/"
+    rows = {
+        p + "n_events": _num(path, "n_events", d.get("n_events", 0)),
+        p + "complete_lifecycles": _num(
+            path, "n_complete_lifecycles",
+            d.get("n_complete_lifecycles", 0)),
+        p + "dropped_events": _num(path, "dropped_events",
+                                   d.get("dropped_events", 0)),
+    }
+    ov = d.get("overhead") or {}
+    if "overhead_pct" in ov:
+        rows[p + "overhead_pct"] = _num(path, "overhead_pct",
+                                        ov["overhead_pct"])
+    for rung, tl in (d.get("rung_timeline") or {}).items():
+        mean = (tl.get("warm") or {}).get("mean_s")
+        if mean is not None:
+            rows[f"{p}rung/{rung}/warm_mean_ms"] = \
+                _num(path, rung, mean) * 1e3
+    return rows
+
+
+def extract(path: Path, d: dict) -> Dict[str, float]:
+    schema = d.get("schema") if isinstance(d, dict) else None
+    if schema == "repro.bench_traffic/v1":
+        return _rows_traffic(path, d)
+    if isinstance(schema, str) and schema.startswith("repro.chaos.campaign"):
+        return _rows_campaign(path, d)
+    if isinstance(schema, str) and schema.startswith("repro.obs.pr10"):
+        return _rows_obs(path, d)
+    if schema is None and isinstance(d, dict):
+        return _rows_run(path, d)
+    raise TrajectoryError(f"{path.name}: unknown schema {schema!r}")
+
+
+def _pr_key(path: Path) -> Tuple[int, str]:
+    m = re.search(r"PR(\d+)", path.name)
+    return (int(m.group(1)) if m else 10 ** 9, path.name)
+
+
+def collect(root: Path) -> Tuple[List[str], Dict[str, Dict[str, float]]]:
+    """-> (artifact column order, {metric: {artifact: value}})."""
+    paths = sorted(
+        (p for pat in ("BENCH_*.json", "CAMPAIGN_*.json", "OBS_*.json")
+         for p in root.glob(pat)), key=_pr_key)
+    if not paths:
+        raise TrajectoryError(f"no artifacts under {root}")
+    cols, table = [], {}
+    for path in paths:
+        col = path.stem
+        if col in cols:
+            raise TrajectoryError(f"duplicate artifact name {col}")
+        cols.append(col)
+        for metric, val in extract(path, load_artifact(path)).items():
+            cell = table.setdefault(metric, {})
+            if col in cell:
+                raise TrajectoryError(
+                    f"{path.name}: duplicate row key {metric!r}")
+            cell[col] = val
+    return cols, table
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if v == int(v) and abs(v) < 1e7:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render(cols: List[str], table: Dict[str, Dict[str, float]]) -> str:
+    lines = ["# Benchmark trajectory", "",
+             f"{len(table)} metrics across {len(cols)} committed "
+             "artifacts (PR order).", "",
+             "| metric | " + " | ".join(cols) + " |",
+             "|---" * (len(cols) + 1) + "|"]
+    for metric in sorted(table):
+        cells = table[metric]
+        lines.append("| " + metric + " | "
+                     + " | ".join(_fmt(cells.get(c)) for c in cols)
+                     + " |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--dir", default=".",
+                        help="directory holding the committed artifacts")
+    parser.add_argument("--out", metavar="PATH", default=None,
+                        help="write the markdown table here too")
+    args = parser.parse_args(argv)
+    cols, table = collect(Path(args.dir))
+    md = render(cols, table)
+    print(md)
+    if args.out:
+        Path(args.out).write_text(md + "\n")
+        print(f"\nwrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
